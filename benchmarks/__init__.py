@@ -1,0 +1,12 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig3_vmul_reduce   — Fig. 2+3: VMUL&Reduce on static (0/1/2 pass-through)
+                       vs dynamic overlay vs fully-custom vs software
+  pr_overhead        — §III PR download cost: compile-cache miss vs hit
+  isa_mix            — §II 42-instruction controller: category mix per graph
+  tile_granularity   — §II heterogeneous tile sizes: fragmentation study
+  branch_speculation — §II conditional branching with speculation
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+Output: ``name,us_per_call,derived`` CSV rows.
+"""

@@ -1,0 +1,179 @@
+"""Fig. 2 + Fig. 3 reproduction: VMUL & Reduce across five 'hardware targets'.
+
+Paper setup (§III): ``sum = Σ A⃗·B⃗`` over 16 KB of data on a 3×3 overlay.
+Five targets, mapped per DESIGN.md §2:
+
+  static overlay, scenario 1..3 — VMUL/Reduce placed with 1/2/3 pass-through
+      tiles between them (Fig. 2); each pass-through is an
+      optimization_barrier'd copy the compiler cannot fuse away
+  dynamic overlay               — contiguous placement, zero pass-throughs,
+      fully fusable (the paper's contribution)
+  fully-custom (HLS)            — one monolithic jit of the expression,
+      no overlay structure at all (upper bound)
+  ARM software baseline         — eager NumPy
+
+The paper's qualitative claims this must reproduce:
+  * static runtime grows monotonically with pass-through count,
+  * dynamic ≈ custom (operators contiguous + pipelined),
+  * PR overhead excluded from the curve (measured in pr_overhead.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.configs.archs import PAPER_VECTOR_LEN
+from repro.core import (PlacementPolicy, TileGrid, assemble, place_dynamic,
+                        place_static, vmul_reduce_graph)
+
+
+def scenarios(n: int):
+    """Fixed placements giving 0/1/2/3 pass-through tiles (Fig. 2).
+
+    The 3×3 grid's LARGE tiles sit at (0,0),(1,1),(2,2); Reduce (LARGE) is
+    pinned at (0,0) and VMUL moved progressively further away.
+    """
+    g = vmul_reduce_graph(n)
+    ops = g.op_nodes()
+    vmul, red = ops[0].node_id, ops[1].node_id
+    grid = TileGrid(3, 3)
+    return g, grid, [
+        ("static_0pass", {vmul: (0, 1), red: (0, 0)}),   # adjacent
+        ("static_1pass", {vmul: (0, 2), red: (0, 0)}),   # manhattan 2
+        ("static_2pass", {vmul: (1, 2), red: (0, 0)}),   # manhattan 3
+        ("static_3pass", {vmul: (2, 2), red: (0, 0)}),   # manhattan 4
+    ]
+
+
+def bench_size(n: int, label: str) -> tuple[list[str], float, list[float]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+    g, grid, fixed = scenarios(n)
+
+    static_us = []
+    for name, placement in fixed:
+        pl = place_static(g, grid, placement)
+        acc = assemble(g, pl)
+        us = time_call(jax.jit(acc.fn), a, b)
+        static_us.append(us)
+        rows.append(row(f"fig3/{label}/{name}", us,
+                        f"passthrough={pl.total_passthrough}"))
+
+    pl = place_dynamic(g, grid)
+    acc = assemble(g, pl)
+    us_dyn = time_call(jax.jit(acc.fn), a, b)
+    rows.append(row(f"fig3/{label}/dynamic", us_dyn,
+                    f"passthrough={pl.total_passthrough}"))
+
+    custom = jax.jit(lambda a, b: jnp.sum(a * b))
+    rows.append(row(f"fig3/{label}/custom_hls", time_call(custom, a, b),
+                    "monolithic_jit"))
+
+    if n <= 1024 * 1024:   # interpret-mode pallas is python-speed per block
+        from repro.kernels import ops as kops
+        rows.append(row(
+            f"fig3/{label}/pallas_fused",
+            time_call(jax.jit(
+                lambda a, b: kops.vmul_reduce(a, b, interpret=True)),
+                a, b), "interpret_mode"))
+
+    an, bn = np.asarray(a), np.asarray(b)
+    import time as _t
+    t0 = _t.perf_counter()
+    iters = 50
+    for _ in range(iters):
+        float(np.dot(an, bn))
+    rows.append(row(f"fig3/{label}/software_numpy",
+                    (_t.perf_counter() - t0) / iters * 1e6, "eager"))
+    return rows, us_dyn, static_us
+
+
+def sharded_main() -> None:
+    """Subprocess entry: 9 host 'devices' = the 3×3 overlay; every hop is a
+    REAL ``ppermute`` transfer between devices (the ICI-faithful mode)."""
+    import jax as _jax
+
+    from repro.core import assemble_sharded, wrap_sharded
+
+    n = 4 * 1024 * 1024  # 16 MB per vector: transfers dominate, compute tiny
+    mesh = _jax.make_mesh((9,), ("tiles",))
+    key = _jax.random.PRNGKey(0)
+    a = _jax.random.normal(key, (n,))
+    b = _jax.random.normal(_jax.random.PRNGKey(1), (n,))
+
+    g, grid, fixed = scenarios(n)
+    out = []
+    for name, placement in fixed:
+        pl = place_static(g, grid, placement)
+        acc = assemble_sharded(g, pl, mesh)
+        fn = wrap_sharded(acc, g, mesh)
+        with mesh:
+            us = time_call(fn, a, b, warmup=2, iters=8)
+        out.append(row(f"fig3/sharded_16MB/{name}", us,
+                       f"hops={pl.total_hops}"))
+    pl = place_dynamic(g, grid)
+    acc = assemble_sharded(g, pl, mesh)
+    fn = wrap_sharded(acc, g, mesh)
+    with mesh:
+        us = time_call(fn, a, b, warmup=2, iters=8)
+    out.append(row("fig3/sharded_16MB/dynamic", us, f"hops={pl.total_hops}"))
+    print("\n".join(out))
+
+
+def run_sharded_subprocess() -> list[str]:
+    """Launch the sharded variant with 9 forced host devices (device count
+    is locked at first jax init, so it needs its own process)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=9 "
+                        + env.get("XLA_FLAGS", ""))
+    env["REPRO_FIG3_SHARDED"] = "1"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig3_vmul_reduce"],
+        capture_output=True, text=True, env=env, timeout=420)
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("fig3/")]
+    if proc.returncode != 0 or not lines:
+        return [row("fig3/sharded_16MB/FAILED", -1.0,
+                    proc.stderr.splitlines()[-1][:80] if proc.stderr else "")]
+    return lines
+
+
+def main() -> list[str]:
+    rows = []
+    # the paper's exact data size (16 KB): pass-through cost is sub-µs on a
+    # CPU cache, so this point reproduces the SETUP but not the separation
+    r, _, _ = bench_size(PAPER_VECTOR_LEN, "16KB_paper")
+    rows += r
+    # sharded mode: 9 devices = 3×3 overlay, hops are REAL inter-device
+    # ppermute transfers — this is where Fig. 3's separation reproduces
+    shard_rows = run_sharded_subprocess()
+    rows += shard_rows
+
+    stat = [float(r.split(",")[1]) for r in shard_rows if "static" in r]
+    dyn = [float(r.split(",")[1]) for r in shard_rows if "dynamic" in r]
+    if stat and dyn and min(stat) > 0:
+        ok_monotone = all(stat[i] <= stat[i + 1] * 1.15
+                          for i in range(len(stat) - 1))
+        ok_dyn = dyn[0] <= min(stat) * 1.1
+        rows.append(row("fig3/claim_static_monotone_in_passthrough", 0.0,
+                        f"holds={ok_monotone}"))
+        rows.append(row("fig3/claim_dynamic_beats_static", 0.0,
+                        f"holds={ok_dyn}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    if os.environ.get("REPRO_FIG3_SHARDED") == "1":
+        sharded_main()
+    else:
+        print("\n".join(main()))

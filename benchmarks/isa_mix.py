@@ -1,0 +1,57 @@
+"""§II controller ISA: instruction-category mix per assembled graph.
+
+The paper reports its controller interprets 42 instructions in 4 categories
+(22 interconnect / 6 branching / 2 vector / 12 memory+register).  This
+benchmark compiles representative graphs and reports the per-category
+instruction counts of each program, plus interpretation throughput of the
+eager ISA interpreter.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.core import (PlacementPolicy, TileGrid, branchy_graph,
+                        compile_graph, place, run_program, saxpy_graph,
+                        vmul_reduce_graph)
+from repro.core.isa import Opcode
+
+
+def main() -> list[str]:
+    rows = []
+    rows.append(row("isa/total_opcodes", float(len(Opcode)), "paper=42"))
+
+    graphs = [vmul_reduce_graph(4096), saxpy_graph(4096), branchy_graph(4096)]
+    for g in graphs:
+        for policy in (PlacementPolicy.DYNAMIC, PlacementPolicy.STATIC):
+            pl = place(g, TileGrid(3, 3), policy)
+            prog = compile_graph(g, pl)
+            mix = prog.mix()
+            derived = "|".join(f"{k}={v}" for k, v in mix.items())
+            rows.append(row(f"isa/{g.name}/{policy.value}",
+                            float(len(prog)), derived))
+
+    # eager interpretation throughput (instructions/sec)
+    g = vmul_reduce_graph(4096)
+    pl = place(g, TileGrid(3, 3), PlacementPolicy.DYNAMIC)
+    prog = compile_graph(g, pl)
+    a = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    run_program(prog, g, (a, b))  # warm
+    iters = 50
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(run_program(prog, g, (a, b)))
+    dt = time.perf_counter() - t0
+    ips = len(prog) * iters / dt
+    rows.append(row("isa/eager_interp_us_per_program", dt / iters * 1e6,
+                    f"instr_per_s={ips:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,29 @@
+"""Run every benchmark; print ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (branch_speculation, fig3_vmul_reduce, isa_mix,
+                            pr_overhead, tile_granularity)
+    modules = [fig3_vmul_reduce, pr_overhead, isa_mix, tile_granularity,
+               branch_speculation]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for line in mod.main():
+                print(line)
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

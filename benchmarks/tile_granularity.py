@@ -1,0 +1,55 @@
+"""§II heterogeneous tile sizes: fragmentation vs large-tile fraction.
+
+The paper sizes 1/4 of its PR regions LARGE (8 DSP) for transcendental
+operators and the rest SMALL (4 DSP), trading internal fragmentation against
+mapping flexibility.  We sweep the LARGE fraction and report:
+
+  * placement success rate for a transcendental-heavy workload,
+  * fragmentation (LARGE tiles wasted on SMALL ops),
+  * total pass-through hops (flexibility loss shows up as longer routes).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import Graph, PlacementError, TileGrid, place_dynamic
+from repro.core import patterns
+
+
+def transcendental_graph(n: int = 1024) -> Graph:
+    """sqrt/sin/log-heavy pipeline — needs many LARGE tiles (paper's case)."""
+    g = Graph("transcendental")
+    x = g.input("x", (n,))
+    h = g.apply(patterns.ABS, x)
+    h = g.apply(patterns.SQRT, h)
+    s = g.apply(patterns.SIN, h)
+    c = g.apply(patterns.COS, h)
+    m = g.apply(patterns.MUL, s, c)
+    l = g.apply(patterns.LOG, g.apply(patterns.ABS, m))
+    g.output(g.apply(patterns.ADD, l, h))
+    return g
+
+
+def main() -> list[str]:
+    rows = []
+    g = transcendental_graph()
+    n_large_ops = sum(1 for node in g.op_nodes()
+                      if node.op is not None
+                      and node.op.tile_class is patterns.TileClass.LARGE)
+    rows.append(row("tile/large_ops_in_workload", float(n_large_ops), ""))
+
+    for frac in (0.0, 0.25, 0.5, 1.0):
+        grid = TileGrid(3, 3, large_fraction=frac)
+        try:
+            pl = place_dynamic(g, grid)
+            rows.append(row(
+                f"tile/frac_{frac}", float(pl.total_passthrough),
+                f"placed=True|frag={pl.fragmentation(g):.2f}"
+                f"|hops={pl.total_hops}"))
+        except PlacementError:
+            rows.append(row(f"tile/frac_{frac}", -1.0, "placed=False"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

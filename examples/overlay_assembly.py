@@ -1,0 +1,67 @@
+"""Overlay assembly of a MODEL step — the paper's flow at framework scale.
+
+A transformer forward pass is assembled from registered stage operators
+(embed → layer-groups → head), exactly the way the paper assembles
+accelerators from pre-synthesized bitstreams.  Shows: stage placement on the
+tile grid, the controller ISA program, the bitstream cache, and static-vs-
+dynamic placement of the pipeline.
+
+    PYTHONPATH=src python examples/overlay_assembly.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.archs import smoke_config
+from repro.core import Overlay, PlacementPolicy, TileGrid, assemble, place
+from repro.models import model as mdl
+from repro.models import params as pm
+from repro.models import transformer as tfm
+from repro.models.transformer import model_spec
+
+
+def main():
+    cfg = smoke_config("zamba2-7b")          # hybrid: mamba + shared attn
+    params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+
+    # the model step as a dataflow graph of stage operators
+    g = mdl.build_step_graph(cfg, (2, 16))
+    print(f"model step graph: {[n.name for n in g.op_nodes()]}")
+
+    # dynamic overlay: stages land contiguous -> pipelined, fusable
+    ov = Overlay(3, 3)
+    acc = ov.assemble(g, jit=False)
+    print(f"dynamic placement: {acc.placement.assignment} "
+          f"(pass-through={acc.placement.total_passthrough})")
+    print(f"ISA program: {len(acc.program)} instructions "
+          f"{acc.instruction_mix}")
+
+    logits = acc(params, tokens)
+
+    # reference: direct forward
+    h, _, _ = tfm.forward(params, cfg, tokens)
+    ref = tfm.unembed(params, h, cfg)
+    np.testing.assert_allclose(np.float32(logits), np.float32(ref),
+                               rtol=2e-3, atol=2e-3)
+    print(f"overlay-assembled logits match direct forward "
+          f"(max |Δ| = {float(abs(np.float32(logits) - np.float32(ref)).max()):.2e})")
+
+    # static overlay: stages scattered -> pass-through tiles appear
+    ops = g.op_nodes()
+    corners = [(0, 0), (2, 2), (0, 2), (2, 0), (1, 1)]
+    fixed = {n.node_id: corners[i % len(corners)] for i, n in enumerate(ops)}
+    pl = place(g, TileGrid(3, 3, large_fraction=1.0), PlacementPolicy.STATIC,
+               fixed)
+    acc_static = assemble(g, pl)
+    print(f"static placement pass-through tiles: {pl.total_passthrough} "
+          f"(dynamic had {acc.placement.total_passthrough})")
+    np.testing.assert_allclose(
+        np.float32(acc_static(params, tokens)), np.float32(ref),
+        rtol=2e-3, atol=2e-3)
+    print("static placement still correct — just slower routes (Fig. 3)")
+
+
+if __name__ == "__main__":
+    main()

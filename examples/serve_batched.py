@@ -1,0 +1,43 @@
+"""Batched serving example: continuous slot recycling through the engine.
+
+Runs a reduced phi3-family model, submits a wave of requests longer than the
+slot pool, and streams them through prefill + batched decode.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.archs import smoke_config
+from repro.models import params as pm
+from repro.models.transformer import model_spec
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg, batch=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    n_requests = 10
+    for rid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=(12,)).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=24))
+
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)}/{n_requests} requests through 4 slots, "
+          f"{tokens} tokens in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
+    for r in sorted(done, key=lambda r: r.rid)[:4]:
+        print(f"  req {r.rid}: first-8 {r.out[:8]}")
+    assert len(done) == n_requests
+
+
+if __name__ == "__main__":
+    main()

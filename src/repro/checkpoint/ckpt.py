@@ -1,0 +1,199 @@
+"""Checkpointing: atomic, integrity-checked, async-capable, resumable.
+
+Design for the 1000-node posture:
+  * **atomic commit** — data files are written to a temp dir, fsynced, then
+    the manifest (with per-file checksums + step) is renamed into place last;
+    a crash mid-write never corrupts the latest checkpoint.
+  * **integrity manifest** — every array file carries a sha256; restore
+    verifies before handing weights to the trainer.
+  * **async save** — a background thread serializes while training continues
+    (the arrays are device_get'd first, so the step isn't blocked on disk).
+  * **sharded-friendly layout** — one file per pytree leaf, path = the tree
+    path; on multi-host each host would write only its addressable shards
+    (here: single process writes all, layout unchanged).
+  * **retention** — keep_n newest checkpoints garbage-collected.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+# numpy can't serialize bf16/fp8 natively — store a same-width integer view
+# and record the logical dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name]), name
+    return arr, name
+
+
+def _from_savable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if logical_dtype in _VIEW_DTYPES:
+        return arr.view(getattr(ml_dtypes, logical_dtype))
+    return arr
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: dict | None = None) -> str:
+    """Atomic checkpoint write. Returns the committed directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    files = {}
+    try:
+        for name, leaf in _leaf_paths(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            saved, logical_dtype = _to_savable(arr)
+            fname = name.replace("/", "__") + ".npy"
+            fpath = os.path.join(tmp, fname)
+            with open(fpath, "wb") as f:
+                np.save(f, saved)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(fpath, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            files[name] = {"file": fname, "sha256": digest,
+                           "shape": list(arr.shape), "dtype": logical_dtype}
+        manifest = {"step": step, "time": time.time(),
+                    "files": files, "extra": extra or {}}
+        mpath = os.path.join(tmp, MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _load_manifest(ckpt_dir: str) -> dict:
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        return json.load(f)
+
+
+def load_checkpoint(ckpt_dir: str, tree_like: Any, *,
+                    verify: bool = True) -> tuple[Any, dict]:
+    """Restore into the structure of ``tree_like``. Returns (tree, manifest)."""
+    manifest = _load_manifest(ckpt_dir)
+    files = manifest["files"]
+    leaves = []
+    for name, _ in _leaf_paths(tree_like):
+        if name not in files:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        meta = files[name]
+        fpath = os.path.join(ckpt_dir, meta["file"])
+        raw = open(fpath, "rb").read()
+        if verify:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(f"checksum mismatch for {name!r} "
+                              f"(corrupt checkpoint {ckpt_dir})")
+        import io
+        leaves.append(_from_savable(np.load(io.BytesIO(raw)), meta["dtype"]))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and \
+                os.path.exists(os.path.join(directory, d, MANIFEST)):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Async save + retention + resume."""
+
+    directory: str
+    keep_n: int = 3
+    _pool: cf.ThreadPoolExecutor = dataclasses.field(
+        default_factory=lambda: cf.ThreadPoolExecutor(max_workers=1))
+    _pending: cf.Future | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        # materialize on host NOW (cheap), serialize in background
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self._gc()
+
+        self._pending = self._pool.submit(work)
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, tree_like: Any):
+        """Returns (tree, manifest) or (None, None) when no checkpoint."""
+        self.wait()           # an in-flight async save must commit first
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        try:
+            return load_checkpoint(path, tree_like)
+        except (IOError, KeyError):
+            # corrupt newest (e.g. torn write despite manifest) — fall back
+            older = sorted(
+                s for s in (latest_step(self.directory),) if s is not None)
+            for d in sorted(os.listdir(self.directory), reverse=True):
+                if not d.startswith("step_"):
+                    continue
+                if int(d.split("_")[1]) >= step:
+                    continue
+                try:
+                    return load_checkpoint(
+                        os.path.join(self.directory, d), tree_like)
+                except (IOError, KeyError):
+                    continue
+            raise
+
+    def _gc(self) -> None:
+        dirs = sorted(d for d in os.listdir(self.directory)
+                      if d.startswith("step_"))
+        for d in dirs[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.directory, d),
+                          ignore_errors=True)

@@ -1,0 +1,10 @@
+"""Architecture configs — exact assigned configurations + the paper's own.
+
+Import side-effect registers every arch; use ``get_config(name)``.
+"""
+
+from repro.configs.base import ArchConfig, get_config, list_archs, register
+# register all archs
+from repro.configs import archs as _archs  # noqa: F401
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "register"]

@@ -1,0 +1,30 @@
+"""Core library: the paper's dynamic overlay + JIT assembly, TPU-native.
+
+Public API:
+  patterns.LIBRARY / Operator / TileClass     — operator ("bitstream") library
+  graph.Graph / vmul_reduce_graph             — symbolic DFG composition
+  placement.TileGrid / PlacementPolicy        — static vs dynamic placement
+  isa.compile_graph / Program / Opcode        — 42-instruction controller ISA
+  interpreter.run_program / assemble          — eager ISA + JIT assembly
+  cache.BitstreamCache                        — compiled-artifact (PR) cache
+  overlay.Overlay                             — facade
+"""
+
+from repro.core.cache import BitstreamCache, aot_compile, cache_key, signature_of
+from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_graph
+from repro.core.interpreter import (AssembledAccelerator, assemble,
+                                    assemble_sharded, run_program, wrap_sharded)
+from repro.core.isa import Instruction, Opcode, Program, compile_graph
+from repro.core.overlay import Overlay
+from repro.core.patterns import LIBRARY, Operator, TileClass
+from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
+                                  TileGrid, place, place_dynamic, place_static)
+
+__all__ = [
+    "AssembledAccelerator", "BitstreamCache", "Graph", "Instruction", "LIBRARY",
+    "Opcode", "Operator", "Overlay", "Placement", "PlacementError",
+    "PlacementPolicy", "Program", "TileClass", "TileGrid", "aot_compile",
+    "assemble", "assemble_sharded", "branchy_graph", "cache_key",
+    "compile_graph", "place", "place_dynamic", "place_static", "run_program",
+    "saxpy_graph", "signature_of", "vmul_reduce_graph", "wrap_sharded",
+]

@@ -1,0 +1,122 @@
+"""BitstreamCache — the compiled-artifact cache (PR-download analogue).
+
+The paper's PR regions take ~1.25 ms per bitstream download, "only incurred at
+startup or initial configuration" (§III, C3).  The TPU analogue of a
+pre-synthesized bitstream is an **AOT-compiled XLA executable**; the analogue
+of the PR download is the XLA compile on a cache miss.  The cache makes both
+facts measurable:
+
+* ``misses`` / ``compile_seconds``  — total configuration overhead paid,
+* ``hits``                          — reuse of already-downloaded bitstreams,
+* LRU eviction with a capacity     — finite PR-region real estate.
+
+Keys must capture everything that shapes the executable: operator identity,
+abstract input signature, mesh topology, and placement — two placements of the
+same graph are *different bitstreams* (they route differently).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+from typing import Any, Callable
+
+import jax
+
+
+def signature_of(args: tuple) -> tuple:
+    """Abstract signature of concrete/abstract inputs (shape, dtype) pairs."""
+    out = []
+    for a in jax.tree.leaves(args):
+        shape = getattr(a, "shape", ())
+        dtype = getattr(a, "dtype", type(a).__name__)
+        out.append((tuple(shape), str(dtype)))
+    return tuple(out)
+
+
+def cache_key(name: str, signature: tuple, mesh_desc: str = "",
+              placement_desc: str = "") -> str:
+    h = hashlib.sha256(
+        repr((name, signature, mesh_desc, placement_desc)).encode()
+    ).hexdigest()[:16]
+    return f"{name}:{h}"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    compile_seconds: float = 0.0   # total "PR download" time paid
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class BitstreamCache:
+    """LRU cache of compiled executables keyed by (op, signature, mesh, placement)."""
+
+    def __init__(self, capacity: int = 256) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._store: collections.OrderedDict[str, Any] = collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._store
+
+    def get_or_compile(self, key: str, build: Callable[[], Any]) -> Any:
+        """Return the cached executable for ``key``; on miss, run ``build``
+        (which should lower+compile) and time it as PR-download overhead."""
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.stats.hits += 1
+            return self._store[key]
+        t0 = time.perf_counter()
+        exe = build()
+        self.stats.compile_seconds += time.perf_counter() - t0
+        self.stats.misses += 1
+        self._store[key] = exe
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1
+        return exe
+
+    def put(self, key: str, exe: Any) -> None:
+        self._store[key] = exe
+        self._store.move_to_end(key)
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.stats = CacheStats()
+
+
+def aot_compile(fn: Callable[..., Any], abstract_args: tuple,
+                mesh: jax.sharding.Mesh | None = None,
+                in_shardings: Any = None, out_shardings: Any = None):
+    """Lower + compile ``fn`` against abstract inputs — produce the bitstream.
+
+    With a mesh, compiles the SPMD program for that topology (the multi-tile
+    bitstream); without, a single-device executable.
+    """
+    kwargs = {}
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    jitted = jax.jit(fn, **kwargs)
+    if mesh is not None:
+        with mesh:
+            return jitted.lower(*abstract_args).compile()
+    return jitted.lower(*abstract_args).compile()

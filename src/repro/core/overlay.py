@@ -1,0 +1,114 @@
+"""Overlay facade — the dynamic overlay the paper's runtime exposes.
+
+Ties together the tile grid, placement policy, ISA compiler, interpreter and
+BitstreamCache into the two-call API programmers get:
+
+    overlay = Overlay(rows=3, cols=3)                       # build the fabric
+    acc = overlay.assemble(graph)                           # JIT assembly
+    y = acc(x_a, x_b)                                       # run
+
+``assemble`` is idempotent and cached: re-assembling the same graph signature
+is a cache *hit* (no recompile — the paper's "only incurred at startup").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.core import cache as cache_lib
+from repro.core import interpreter as interp
+from repro.core.cache import BitstreamCache
+from repro.core.graph import Graph
+from repro.core.isa import Program, compile_graph
+from repro.core.placement import (Coord, Placement, PlacementPolicy, TileGrid,
+                                  place)
+
+
+@dataclasses.dataclass
+class OverlayStats:
+    assemblies: int = 0
+    reconfigurations: int = 0   # placements changed between assemblies
+
+
+class Overlay:
+    """A rows×cols dynamic overlay with a bitstream cache.
+
+    Args:
+      rows/cols: tile grid dimensions (paper evaluates 3×3).
+      policy: DYNAMIC (paper's contribution) or STATIC (baseline).
+      large_fraction: fraction of LARGE tiles (paper: 1/4).
+      mesh / tile_axis: optional JAX mesh for real-ICI assembly
+        (:func:`interpreter.assemble_sharded`); otherwise local assembly.
+      cache_capacity: bitstream cache slots.
+    """
+
+    def __init__(self, rows: int = 3, cols: int = 3, *,
+                 policy: PlacementPolicy = PlacementPolicy.DYNAMIC,
+                 large_fraction: float = 0.25,
+                 mesh: jax.sharding.Mesh | None = None,
+                 tile_axis: str = "tiles",
+                 cache_capacity: int = 256) -> None:
+        self.grid = TileGrid(rows, cols, large_fraction)
+        self.policy = policy
+        self.mesh = mesh
+        self.tile_axis = tile_axis
+        self.cache = BitstreamCache(cache_capacity)
+        self.stats = OverlayStats()
+        self._last_placement: Placement | None = None
+
+    # -- assembly -------------------------------------------------------------
+    def plan(self, graph: Graph,
+             fixed: dict[int, Coord] | None = None) -> tuple[Placement, Program]:
+        """Placement + ISA program, without building the executable."""
+        placement = place(graph, self.grid, self.policy, fixed)
+        return placement, compile_graph(graph, placement)
+
+    def assemble(self, graph: Graph, *,
+                 fixed: dict[int, Coord] | None = None,
+                 jit: bool = True) -> interp.AssembledAccelerator:
+        """JIT-assemble ``graph`` into an accelerator (cached)."""
+        placement, program = self.plan(graph, fixed)
+        if self._last_placement is not None and \
+                placement.assignment != self._last_placement.assignment:
+            self.stats.reconfigurations += 1
+        self._last_placement = placement
+        self.stats.assemblies += 1
+
+        if self.mesh is not None:
+            acc = interp.assemble_sharded(graph, placement, self.mesh,
+                                          self.tile_axis, program=program)
+        else:
+            acc = interp.assemble(graph, placement, program=program)
+
+        if not jit:
+            return acc
+
+        graph.infer_shapes()
+        sig = cache_lib.signature_of(
+            tuple(graph.toposorted()[i].aval for i in graph.input_ids))
+        key = cache_lib.cache_key(
+            graph.name, sig,
+            mesh_desc=str(self.mesh.shape) if self.mesh else "local",
+            placement_desc=repr(sorted(placement.assignment.items())))
+
+        def build() -> Callable[..., Any]:
+            if self.mesh is not None:
+                return interp.wrap_sharded(acc, graph, self.mesh)
+            return jax.jit(acc.fn)
+
+        fn = self.cache.get_or_compile(key, build)
+        return dataclasses.replace(acc, fn=fn)
+
+    # -- introspection ----------------------------------------------------------
+    def describe(self) -> dict[str, Any]:
+        return {
+            "grid": (self.grid.rows, self.grid.cols),
+            "large_tiles": len(self.grid.large_coords()),
+            "policy": self.policy.value,
+            "cache": dataclasses.asdict(self.cache.stats),
+            "assemblies": self.stats.assemblies,
+            "reconfigurations": self.stats.reconfigurations,
+        }

@@ -1,0 +1,255 @@
+"""Parallel-pattern operator library — the "pre-synthesized bitstream" library.
+
+The paper's programmers compose accelerators from a library of pre-synthesized
+parallel patterns (map, reduce, foreach, filter) plus scalar operators (mul, add,
+sqrtf, sin, cos, log).  Here each library entry is an :class:`Operator`: a named,
+shape-polymorphic, JAX-traceable unit with a *granularity class* mirroring the
+paper's heterogeneous PR-tile sizes (§II):
+
+* ``LARGE``  — occupies a large PR tile (paper: 8 DSP / 964 FF / 1228 LUT;
+  here: ops worth an explicit Pallas kernel or an MXU matmul — attention, SSD
+  scan, matmul, transcendentals).
+* ``SMALL``  — packs into a small PR tile (paper: 4 DSP / 156 FF / 270 LUT;
+  here: cheap elementwise ops left to XLA fusion).
+
+Operators carry no placement or distribution logic — that belongs to
+``placement.py`` / ``interpreter.py``.  They are pure ``jnp`` callables so the
+assembled accelerator stays a single traceable program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class TileClass(enum.Enum):
+    """Granularity class — which PR-tile size an operator needs (paper §II)."""
+
+    SMALL = "small"
+    LARGE = "large"
+
+
+@dataclasses.dataclass(frozen=True)
+class Operator:
+    """One library entry — the analogue of a pre-synthesized bitstream.
+
+    Attributes:
+      name: library name (cache-key component; the paper's "symbolic link").
+      arity: number of tensor inputs.
+      fn: the JAX-traceable computation.
+      tile_class: LARGE or SMALL (heterogeneous tile sizing, paper C5).
+      flops_per_elem: rough per-element FLOP cost, used by the placement cost
+        model (the paper sizes tiles by DSP count; we size by FLOPs).
+    """
+
+    name: str
+    arity: int
+    fn: Callable[..., Any]
+    tile_class: TileClass = TileClass.SMALL
+    flops_per_elem: float = 1.0
+
+    def __call__(self, *args):
+        if len(args) != self.arity:
+            raise TypeError(
+                f"operator {self.name!r} expects {self.arity} inputs, got {len(args)}"
+            )
+        return self.fn(*args)
+
+
+class OperatorLibrary:
+    """Registry of operators — the bitstream library handed to programmers."""
+
+    def __init__(self) -> None:
+        self._ops: dict[str, Operator] = {}
+
+    def register(self, op: Operator) -> Operator:
+        if op.name in self._ops:
+            raise ValueError(f"operator {op.name!r} already registered")
+        self._ops[op.name] = op
+        return op
+
+    def __getitem__(self, name: str) -> Operator:
+        try:
+            return self._ops[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown operator {name!r}; known: {sorted(self._ops)}"
+            ) from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._ops
+
+    def names(self) -> list[str]:
+        return sorted(self._ops)
+
+
+LIBRARY = OperatorLibrary()
+
+
+def _reg(name: str, arity: int, fn, tile_class=TileClass.SMALL, flops=1.0) -> Operator:
+    return LIBRARY.register(
+        Operator(name=name, arity=arity, fn=fn, tile_class=tile_class, flops_per_elem=flops)
+    )
+
+
+# --- scalar / elementwise operators (the paper's small-tile residents) -------
+ADD = _reg("add", 2, jnp.add)
+SUB = _reg("sub", 2, jnp.subtract)
+MUL = _reg("mul", 2, jnp.multiply)
+DIV = _reg("div", 2, jnp.divide)
+MAX = _reg("max", 2, jnp.maximum)
+MIN = _reg("min", 2, jnp.minimum)
+NEG = _reg("neg", 1, jnp.negative)
+ABS = _reg("abs", 1, jnp.abs)
+RELU = _reg("relu", 1, jax.nn.relu)
+SIGMOID = _reg("sigmoid", 1, jax.nn.sigmoid)
+SILU = _reg("silu", 1, jax.nn.silu)
+GELU = _reg("gelu", 1, jax.nn.gelu, flops=4.0)
+
+# --- transcendental operators (the paper's large-tile residents: §II lists
+# sqrtf, sin, cos, log as the ops needing the 8-DSP tiles) --------------------
+SQRT = _reg("sqrtf", 1, jnp.sqrt, TileClass.LARGE, flops=4.0)
+SIN = _reg("sin", 1, jnp.sin, TileClass.LARGE, flops=8.0)
+COS = _reg("cos", 1, jnp.cos, TileClass.LARGE, flops=8.0)
+LOG = _reg("log", 1, jnp.log, TileClass.LARGE, flops=8.0)
+EXP = _reg("exp", 1, jnp.exp, TileClass.LARGE, flops=8.0)
+RSQRT = _reg("rsqrt", 1, jax.lax.rsqrt, TileClass.LARGE, flops=4.0)
+
+
+# --- structured patterns ------------------------------------------------------
+def make_map(op: Operator) -> Operator:
+    """``map`` parallel pattern: lift a unary operator over a tensor."""
+    if op.arity != 1:
+        raise ValueError(f"map needs a unary operator, got {op.name!r} (arity {op.arity})")
+    return Operator(
+        name=f"map[{op.name}]",
+        arity=1,
+        fn=op.fn,  # jnp ops broadcast; map is the identity lifting on tensors
+        tile_class=op.tile_class,
+        flops_per_elem=op.flops_per_elem,
+    )
+
+
+def make_zip_with(op: Operator) -> Operator:
+    """``zipWith`` pattern: lift a binary operator over two tensors (VMUL = zipWith mul)."""
+    if op.arity != 2:
+        raise ValueError(f"zip_with needs a binary operator, got {op.name!r}")
+    return Operator(
+        name=f"zip[{op.name}]",
+        arity=2,
+        fn=op.fn,
+        tile_class=op.tile_class,
+        flops_per_elem=op.flops_per_elem,
+    )
+
+
+def make_reduce(op: Operator, axis: int | None = None) -> Operator:
+    """``reduce`` pattern over a monoid operator."""
+    if op.arity != 2:
+        raise ValueError(f"reduce needs a binary operator, got {op.name!r}")
+    reducers = {"add": jnp.sum, "mul": jnp.prod, "max": jnp.max, "min": jnp.min}
+    if op.name not in reducers:
+        # generic (slower) path for arbitrary monoids
+        def fn(x, _op=op, _axis=axis):
+            ax = _axis if _axis is not None else tuple(range(x.ndim))
+            return jax.lax.reduce(x, jnp.zeros((), x.dtype), _op.fn, ax if isinstance(ax, tuple) else (ax,))
+    else:
+        def fn(x, _r=reducers[op.name], _axis=axis):
+            return _r(x, axis=_axis)
+    return Operator(
+        name=f"reduce[{op.name},axis={axis}]",
+        arity=1,
+        fn=fn,
+        tile_class=TileClass.LARGE,  # reductions use the accumulator-equipped tiles
+        flops_per_elem=op.flops_per_elem,
+    )
+
+
+def make_scan(op: Operator, axis: int = 0) -> Operator:
+    """``scan`` (prefix) pattern — associative op required."""
+    if op.arity != 2:
+        raise ValueError(f"scan needs a binary operator, got {op.name!r}")
+    def fn(x, _op=op, _axis=axis):
+        return jax.lax.associative_scan(_op.fn, x, axis=_axis)
+    return Operator(
+        name=f"scan[{op.name},axis={axis}]",
+        arity=1,
+        fn=fn,
+        tile_class=TileClass.LARGE,
+        flops_per_elem=op.flops_per_elem,
+    )
+
+
+def make_filter(pred: Callable[[Any], Any], name: str) -> Operator:
+    """``filter`` pattern, TPU-idiomatic: returns ``(values, mask)``.
+
+    FPGAs stream-compact; SPMD TPU programs need static shapes, so filter
+    yields the original values plus a boolean mask (downstream reduces must be
+    mask-aware).  This is a documented hardware adaptation (DESIGN.md §2).
+    """
+    def fn(x, _p=pred):
+        return x, _p(x)
+    return Operator(name=f"filter[{name}]", arity=1, fn=fn, tile_class=TileClass.SMALL)
+
+
+def make_foreach(fn_op: Operator, n: int) -> Operator:
+    """``foreach`` pattern: apply an operator n times in sequence (paper's loop)."""
+    if fn_op.arity != 1:
+        raise ValueError("foreach needs a unary operator")
+    def fn(x, _f=fn_op.fn, _n=n):
+        return jax.lax.fori_loop(0, _n, lambda _, v: _f(v), x)
+    return Operator(
+        name=f"foreach[{fn_op.name},n={n}]",
+        arity=1,
+        fn=fn,
+        tile_class=fn_op.tile_class,
+        flops_per_elem=fn_op.flops_per_elem * n,
+    )
+
+
+MATMUL = LIBRARY.register(
+    Operator(
+        name="matmul",
+        arity=2,
+        fn=lambda a, b: jnp.matmul(a, b, preferred_element_type=jnp.float32),
+        tile_class=TileClass.LARGE,
+        flops_per_elem=2.0,
+    )
+)
+
+
+def make_stencil(weights: Sequence[float]) -> Operator:
+    """1-D stencil (convolution) pattern with static taps."""
+    w = jnp.asarray(weights)
+    def fn(x, _w=w):
+        pad = (len(_w) - 1) // 2
+        xp = jnp.pad(x, [(pad, len(_w) - 1 - pad)] + [(0, 0)] * (x.ndim - 1))
+        return sum(_w[i] * jax.lax.slice_in_dim(xp, i, i + x.shape[0], axis=0)
+                   for i in range(len(_w)))
+    return Operator(
+        name=f"stencil[{len(weights)}]",
+        arity=1,
+        fn=fn,
+        tile_class=TileClass.LARGE,
+        flops_per_elem=2.0 * len(weights),
+    )
+
+
+def register_model_operator(
+    name: str, arity: int, fn: Callable[..., Any], *, flops_per_elem: float = 2.0
+) -> Operator:
+    """Register a LARGE model-level operator (attention block, MoE layer, SSD
+    scan, …) as a library bitstream so model steps can be overlay-assembled.
+
+    Idempotent re-registration with an identical name is rejected to keep
+    cache keys unambiguous — model code namespaces names as ``<arch>/<op>``.
+    """
+    return LIBRARY.register(
+        Operator(name=name, arity=arity, fn=fn, tile_class=TileClass.LARGE,
+                 flops_per_elem=flops_per_elem)
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, batch_specs, make_batch
+
+__all__ = ["SyntheticLM", "batch_specs", "make_batch"]

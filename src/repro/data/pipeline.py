@@ -1,0 +1,127 @@
+"""Deterministic synthetic token pipeline (sharded, resumable, prefetching).
+
+No external datasets exist offline, so the pipeline synthesizes a *learnable*
+token stream: a fixed random Markov chain over the vocabulary (the model can
+reduce loss by learning the transition structure — which is what the
+train-loss-decreases integration test asserts).  Properties a production
+pipeline needs and this one has:
+
+  * determinism: batch t is a pure function of (seed, step) — restart-safe,
+  * sharding: each data-parallel host materializes only its slice,
+  * resumability: ``state = step`` — checkpointing the cursor is trivial,
+  * prefetch: a double-buffered iterator hides generation latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Markov-chain LM stream."""
+
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    branching: int = 4          # out-degree of the chain: lower = easier
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.vocab_size
+        self._next = rng.integers(0, v, size=(v, self.branching))
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1) -> dict:
+        """Batch for one data shard at one step — pure function of args."""
+        if self.batch_size % num_shards:
+            raise ValueError("batch not divisible by shards")
+        local_b = self.batch_size // num_shards
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + shard)
+        starts = rng.integers(0, self.vocab_size, size=(local_b,))
+        choices = rng.integers(0, self.branching,
+                               size=(local_b, self.seq_len))
+        toks = np.empty((local_b, self.seq_len + 1), np.int32)
+        toks[:, 0] = starts
+        cur = starts
+        for t in range(self.seq_len):
+            cur = self._next[cur, choices[:, t]]
+            toks[:, t + 1] = cur
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def iterate(self, start_step: int = 0, shard: int = 0,
+                num_shards: int = 1) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch(step, shard, num_shards)
+            step += 1
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, step: int = 0,
+               seed: int = 0) -> dict:
+    """Concrete batch for an arch (adds stub frontend inputs when needed)."""
+    ds = SyntheticLM(cfg.vocab_size, seq, batch, seed)
+    out = ds.batch(step)
+    rng = np.random.default_rng(seed + 17 * step)
+    if cfg.frontend == "vision":
+        npatch = min(256, seq // 2)
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, npatch, cfg.frontend_dim)),
+            jnp.bfloat16)
+    elif cfg.frontend == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.frontend_dim)), jnp.bfloat16)
+    return out
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Abstract batch (ShapeDtypeStructs) — what the dry-run lowers against."""
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision":
+        npatch = min(256, seq // 2)
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, npatch, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.frontend == "audio":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.frontend_dim), jnp.bfloat16)
+    return spec
+
+
+class Prefetcher:
+    """Double-buffered prefetch wrapper around a batch iterator."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2):
+        import collections
+        import threading
+        import queue
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._it = it
+        self._stop = False
+
+        def worker():
+            for item in it:
+                if self._stop:
+                    return
+                self._q.put(item)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop = True

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels — the LARGE-tile operator bitstreams.
+
+TPU (v5e) is the *target*; this container is CPU-only, so every kernel runs
+``interpret=True`` here (the kernel body executes in Python on CPU) and
+compiled-mode on real TPUs.  ``INTERPRET`` flips automatically.
+
+Kernel inventory (one module per compute hot-spot, each with a pure-jnp
+oracle in ``ref.py`` and a jitted public wrapper in ``ops.py``):
+
+  vmul_reduce     — the paper's own evaluation pattern (Σ A⃗·B⃗), fused
+  rmsnorm         — fused RMSNorm (row-blocked)
+  flash_attention — blocked online-softmax attention (causal, GQA)
+  ssd_scan        — Mamba-2 SSD chunk-local kernel (intra-chunk quadratic part)
+"""
+
+import jax
+
+INTERPRET = jax.default_backend() != "tpu"
+
+# MXU/VPU alignment constants (v5e): 128-lane registers, 128x128 systolic array.
+LANE = 128
+SUBLANE = 8

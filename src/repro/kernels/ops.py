@@ -1,0 +1,138 @@
+"""Public jitted wrappers for the Pallas kernels.
+
+These are what the model layer imports.  Each wrapper:
+  * jits with static config args,
+  * falls back to the pure-jnp reference under ``jax.grad`` where the kernel
+    has no custom VJP (flash_attention/ssd define custom VJPs via the
+    reference backward — numerically identical, recompute-based),
+  * is registered in the overlay operator library as a LARGE-tile bitstream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import vmul_reduce as _vr
+
+# ---------------------------------------------------------------------------
+# vmul_reduce — forward-only pattern (the paper's benchmark op)
+# ---------------------------------------------------------------------------
+vmul_reduce = jax.jit(_vr.vmul_reduce, static_argnames=("block_rows", "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm — custom VJP (backward recomputes from inputs, flash-style)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_cv(x, w, eps):
+    return _rn.rmsnorm(x, w, eps=eps)
+
+
+def _rmsnorm_fwd(x, w, eps):
+    return _rn.rmsnorm(x, w, eps=eps), (x, w)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: _ref.rmsnorm(x_, w_, eps=eps), x, w)
+    return vjp(g)
+
+
+_rmsnorm_cv.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    return _rmsnorm_cv(x, w, eps)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — custom VJP via reference backward (recompute)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attn_cv(q, k, v, causal, window, softcap, scale):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale)
+
+
+def _attn_fwd(q, k, v, causal, window, softcap, scale):
+    return _attn_cv(q, k, v, causal, window, softcap, scale), (q, k, v)
+
+
+def _attn_bwd(causal, window, softcap, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.attention(q_, k_, v_, causal=causal,
+                                          window=window, softcap=softcap,
+                                          scale=scale), q, k, v)
+    return vjp(g)
+
+
+_attn_cv.defvjp(_attn_fwd, _attn_bwd)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              softcap: float | None = None, scale: float | None = None):
+    """Flash attention (Pallas) with GQA + sliding window + softcap."""
+    return _attn_cv(q, k, v, causal, window, softcap, scale)
+
+
+# ---------------------------------------------------------------------------
+# SSD — custom VJP via the CHUNKED jnp backward (recompute).  The naive
+# per-step recurrence would store O(seq) state residuals (hundreds of GB at
+# 4k×1M-token shapes); the chunked backward stores per-chunk states only.
+# ---------------------------------------------------------------------------
+USE_PALLAS_SSD = True     # launch/dryrun.py flips this for 512-device lowering
+
+
+def set_use_pallas_ssd(flag: bool) -> None:
+    global USE_PALLAS_SSD
+    USE_PALLAS_SSD = flag
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _ssd_cv(x, a, b, c, chunk):
+    if USE_PALLAS_SSD:
+        y, _ = _ssd.ssd(x, a, b, c, chunk=chunk)
+        return y
+    return _ref.ssd_chunked(x, a, b, c, chunk=chunk)
+
+
+def _ssd_fwd(x, a, b, c, chunk):
+    return _ssd_cv(x, a, b, c, chunk), (x, a, b, c)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, a, b, c = res
+    _, vjp = jax.vjp(
+        lambda *t: _ref.ssd_chunked(*t, chunk=chunk), x, a, b, c)
+    return vjp(g)
+
+
+_ssd_cv.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd(x, a, b, c, *, chunk: int = 64):
+    """Mamba-2 SSD (y only; use ssd_with_state for stateful decode)."""
+    return _ssd_cv(x, a, b, c, chunk)
+
+
+def ssd_with_state(x, a, b, c, *, chunk: int = 64, initial_state=None):
+    if USE_PALLAS_SSD:
+        return _ssd.ssd(x, a, b, c, chunk=chunk, initial_state=initial_state)
+    return _ref.ssd_chunked(x, a, b, c, chunk=chunk,
+                            initial_state=initial_state, return_state=True)
+
+
+def ssd_decode_step(x, a, b, c, state):
+    """Single-token SSD update (serving): state (batch, h, n, p)."""
+    new = state * jnp.exp(a)[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", b, x)
+    y = jnp.einsum("bhn,bhnp->bhp", c, new)
+    return y.astype(x.dtype), new

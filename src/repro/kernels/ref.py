@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+Each function mirrors its kernel's public signature but is written in the
+most obvious dense formulation (no blocking, no online rescaling, no
+chunking).  Tests sweep shapes/dtypes and ``assert_allclose`` kernel vs. ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vmul_reduce(a: jax.Array, b: jax.Array) -> jax.Array:
+    """sum = Σ A⃗·B⃗ (paper §III)."""
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32)).astype(a.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              softcap: float | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Dense reference attention with GQA/window/softcap. Shapes as kernel."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+                chunk: int = 64, initial_state: jax.Array | None = None,
+                return_state: bool = False):
+    """Chunked SSD in pure jnp — same math as the Pallas kernel, autodiff-
+    friendly (backward residuals are per-chunk states, not per-step states).
+
+    Shapes as :func:`ssd_naive`. Returns y, or (y, final_state (b,h,n,p)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    L = chunk
+
+    # keep batch (data-sharded) and heads (model-sharded) as SEPARATE dims:
+    # merging them into one z = b·h dim loses both shardings and forces the
+    # SPMD partitioner to all-gather every intermediate (§Perf zamba2 iter 1:
+    # 16 GiB of f32 all-gathers per layer-trip before this change)
+    def to5(t, feat):
+        if feat:
+            return t.transpose(0, 2, 1, 3).reshape(bsz, h, nc, L, t.shape[-1])
+        return t.transpose(0, 2, 1).reshape(bsz, h, nc, L)
+
+    xb = to5(x, True).astype(jnp.float32)                    # (b, h, nc, L, p)
+    ab = to5(a, False).astype(jnp.float32)                   # (b, h, nc, L)
+    bb = to5(b, True).astype(jnp.float32)
+    cb = to5(c, True).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ab, axis=-1)                          # (b, h, nc, L)
+    seg = a_cum[..., :, None] - a_cum[..., None, :]          # (b, h, nc, L, L)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: the j>i entries have seg>0 and can overflow to inf,
+    # which turns the where()'s backward into 0*inf = NaN
+    decay = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    scores = jnp.einsum("bhcln,bhcmn->bhclm", cb, bb) * decay
+    y_diag = jnp.einsum("bhclm,bhcmp->bhclp", scores, xb)
+
+    w = jnp.exp(a_cum[..., -1:] - a_cum)                     # (b, h, nc, L)
+    states = jnp.einsum("bhcln,bhcl,bhclp->bhcnp", bb, w, xb)
+
+    a_tot = a_cum[..., -1]                                   # (b, h, nc)
+    def step(carry, inp):
+        st_c, a_c = inp
+        new = carry * jnp.exp(a_c)[..., None, None] + st_c
+        return new, carry
+    init = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(2, 0, 1, 3, 4), a_tot.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 2, 0, 3, 4)                     # (b, h, nc, n, p)
+
+    y_off = jnp.einsum("bhcln,bhcnp,bhcl->bhclp", cb, prev, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    if return_state:
+        return y.astype(x.dtype), final
+    return y.astype(x.dtype)
+
+
+def ssd_naive(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+              initial_state: jax.Array | None = None):
+    """Sequential SSD recurrence: h_t = e^{a_t} h_{t-1} + B_t⊗x_t; y_t = C_t·h_t.
+
+    x: (batch, s, h, p); a: (batch, s, h); b, c: (batch, s, h, n).
+    Returns y: (batch, s, h, p), final_state: (batch, h, n, p).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, t):
+        xt, at, bt, ct = t
+        new = carry * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, new)
+        return new, yt
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2, 3).astype(jnp.float32),
+          c.transpose(1, 0, 2, 3).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,156 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+The four assigned shapes:
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill (serve)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token, full cache)
+  long_500k    seq 524288, global_batch 1    -> serve_step (SSM/hybrid only)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation); ``shardings_for`` maps them (plus params/opt/cache)
+to NamedShardings on a mesh.  ``applicable`` encodes the skip rules from
+DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import batch_specs
+from repro.models import model as mdl
+from repro.models import params as pm
+from repro.models.transformer import cache_spec, model_spec
+from repro.optim import adamw_update, opt_state_spec
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """(runnable?, reason). Skip rules per DESIGN.md §5."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch — 500k decode needs sub-quadratic mixing"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    info = SHAPES[shape]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    if kind == "train":
+        return {"batch": batch_specs(cfg, batch, seq)}
+    if kind == "prefill":
+        extras = {}
+        if cfg.frontend == "vision":
+            extras["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, min(256, seq // 2), cfg.frontend_dim), jnp.bfloat16)
+        if cfg.is_encdec:
+            extras["enc_in"] = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.frontend_dim), jnp.bfloat16)
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "caches": pm.abstract(cache_spec(cfg, batch, seq)),
+                "extras": extras}
+    # decode: one new token against a seq-length cache
+    return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "caches": pm.abstract(cache_spec(cfg, batch, seq))}
+
+
+def train_state_specs(cfg: ArchConfig) -> tuple[Any, Any]:
+    spec = model_spec(cfg)
+    return pm.abstract(spec), pm.abstract(opt_state_spec(spec))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            mdl.loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, caches, extras):
+        return mdl.prefill(params, cfg, tokens, caches,
+                           enc_in=extras.get("enc_in"),
+                           patch_embeds=extras.get("patch_embeds"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, caches):
+        return mdl.decode_step(params, cfg, tokens, caches)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+def _spec_tree_shardings(mesh, rules, spec_tree):
+    """NamedShardings for a ParamSpec tree (shape-aware divisibility)."""
+    return jax.tree.map(
+        lambda s: shd.named_sharding(mesh, rules, s.axes, s.shape),
+        spec_tree, is_leaf=pm.is_spec)
+
+
+def _sds_shardings(mesh, rules, sds_tree, axes_fn):
+    return jax.tree.map(
+        lambda s: shd.named_sharding(mesh, rules, axes_fn(s), s.shape),
+        sds_tree)
+
+
+def batch_shardings(mesh, rules, batch_spec_tree):
+    def axes_for(s):
+        # (B, S) tokens/labels; (B, P, F) embeds; (B, S, F) frames
+        return ("batch",) + (None,) * (len(s.shape) - 1)
+    return _sds_shardings(mesh, rules, batch_spec_tree, axes_for)
+
+
+def cell_shardings(cfg: ArchConfig, shape: str, mesh,
+                   rules: shd.ShardingRules | None = None):
+    """(in_shardings, out_shardings, arg specs) for a cell's step function."""
+    rules = rules or shd.DEFAULT_RULES
+    spec = model_spec(cfg)
+    p_sh = _spec_tree_shardings(mesh, rules, spec)
+    info = SHAPES[shape]
+
+    if info["kind"] == "train":
+        opt_sh = _spec_tree_shardings(mesh, rules, opt_state_spec(spec))
+        b_sh = batch_shardings(mesh, rules,
+                               input_specs(cfg, shape)["batch"])
+        metrics_sh = None
+        in_sh = (p_sh, opt_sh, b_sh)
+        out_sh = (p_sh, opt_sh, metrics_sh)
+        return in_sh, out_sh
+
+    cache_sh = _spec_tree_shardings(
+        mesh, rules, cache_spec(cfg, info["batch"], info["seq"]))
+    tok_sh = shd.named_sharding(mesh, rules, ("batch", None),
+                                (info["batch"], info["seq"] if
+                                 info["kind"] == "prefill" else 1))
+    logits_sh = shd.named_sharding(mesh, rules, ("batch", None),
+                                   (info["batch"], cfg.vocab_size))
+    if info["kind"] == "prefill":
+        specs = input_specs(cfg, shape)
+        extras = {
+            k: shd.named_sharding(
+                mesh, rules, ("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+            for k, v in specs["extras"].items()}
+        return (p_sh, tok_sh, cache_sh, extras), (logits_sh, cache_sh)
+    return (p_sh, tok_sh, cache_sh), (logits_sh, cache_sh)

@@ -1,0 +1,6 @@
+"""Model substrate: configurable transformer/SSM/MoE families.
+
+Everything is functional: parameters are nested dicts of arrays, built from a
+``ParamSpec`` tree (``params.py``) that carries logical sharding axes, so the
+same model code serves CPU smoke tests and the 512-chip dry-run.
+"""

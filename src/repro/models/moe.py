@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Expert parallelism: experts are sharded over the ``model`` mesh axis; tokens
+over ``data``.  Dispatch is the sort-based formulation (dropless-style
+indexing, capacity-bounded buffers) rather than the GShard one-hot einsum —
+the (T·k, E) one-hot tensor is O(T·E) memory and dies at deepseek scale
+(1M tokens × 256 experts), whereas sort-based indexing is O(T·k):
+
+  1. router top-k  ->  (T, k) expert ids + gates,
+  2. argsort slot ids; position-in-expert = rank − segment start,
+  3. scatter tokens into an (E, C, d) buffer (the EP all-to-all happens here
+     when E is model-sharded and T data-sharded — XLA inserts the shuffle),
+  4. batched per-expert SwiGLU on (E, C, d) — one einsum, MXU-friendly,
+  5. gather back + combine with gates.
+
+Overlay reading (DESIGN.md §2): experts are interchangeable bitstreams and
+the router is the runtime interpreter choosing which bitstream each token's
+"tile" loads — the closest model-level analogue of the paper's JIT assembly.
+
+deepseek-v3 options: sigmoid router scoring + shared experts always on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.base import ArchConfig
+from repro.models import params as pm
+from repro.models.params import ParamSpec, dense
+
+
+def moe_spec(cfg: ArchConfig) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    spec = {
+        "router": dense(d, e, None, None),   # tiny; replicated for EP dispatch
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_down": ParamSpec((e, f, d), ("experts", None, "embed")),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        spec["shared"] = {
+            "w_gate": dense(d, fs, "embed", "ffn"),
+            "w_up": dense(d, fs, "embed", "ffn"),
+            "w_down": dense(fs, d, "ffn", "embed"),
+        }
+    return spec
+
+
+def router_topk(scores_logits: jax.Array, cfg: ArchConfig):
+    """Top-k routing. Returns (gates (T,k) f32, idx (T,k) i32, aux_loss)."""
+    t, e = scores_logits.shape
+    k = cfg.experts_per_token
+    if cfg.router_scoring == "sigmoid":        # deepseek-v3
+        scores = jax.nn.sigmoid(scores_logits.astype(jnp.float32))
+    else:
+        scores = jax.nn.softmax(scores_logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(scores, k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-20)
+
+    # Switch-style load-balance loss (reported as a metric; weight in optim)
+    density = jnp.mean(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=1), axis=0)
+    router_prob = jnp.mean(jax.nn.softmax(
+        scores_logits.astype(jnp.float32), axis=-1), axis=0)
+    aux = e * jnp.sum(density * router_prob) / k
+    return gates, idx, aux
+
+
+def _local_dispatch_positions(flat_e: jax.Array, n_slots: int, e: int):
+    """Sort-based position-in-expert for a flat slot->expert assignment."""
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n_slots, dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros((n_slots,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_fwd_ep(p: dict, x: jax.Array, cfg: ArchConfig, mesh,
+               rules) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map (beyond-paper optimization).
+
+    Key insight: activations are replicated over the ``model`` axis, so every
+    model shard can *locally* filter the tokens routed to its own experts —
+    dispatch costs ZERO communication.  The only collectives are the FSDP
+    weight all-gather (over data) and one psum of the combined output (over
+    model).  The naive jit formulation instead materializes a cross-device
+    (E, C, d) scatter that XLA partitions as replicated-compute +
+    all-reduce(150 GB) per layer — measured 20× redundant FLOPs and
+    205 GiB/dev collectives per layer (EXPERIMENTS.md §Perf, deepseek iter 1).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t, d = x.shape
+    model_ax = "model" if mesh.shape.get("model", 1) > 1 else None
+    # FSDP axis from the ACTIVE RULES, not mesh presence: serving rules turn
+    # FSDP off (weights replicated over data) — forcing P(model, data) here
+    # would reshard + all-gather the experts every layer (§Perf regression)
+    fsdp = shd.filter_axes(mesh, rules.embed)
+    fsdp_ax = ((fsdp,) if isinstance(fsdp, str) else fsdp) if fsdp else ()
+    batch_ax_rules = shd.filter_axes(mesh, rules.batch)
+    batch_ax = batch_ax_rules
+    n_model = mesh.shape.get("model", 1)
+    if e % n_model:
+        raise ValueError(f"experts {e} not divisible by model axis {n_model}")
+    e_loc = e // n_model
+    n_data = 1
+    for a in ((batch_ax,) if isinstance(batch_ax, str) else (batch_ax or ())):
+        n_data *= mesh.shape[a]
+    if t % n_data:          # token count not shardable -> replicate tokens
+        batch_ax = None
+        n_data = 1
+    t_loc = t // n_data
+    cap = int(t_loc * k / e * cfg.capacity_factor) + 1
+
+    w_spec = P(model_ax, fsdp_ax if fsdp_ax else None, None)
+    w_down_spec = P(model_ax, None, fsdp_ax if fsdp_ax else None)
+    if fsdp_ax and d % n_data:
+        w_spec = P(model_ax, None, None)
+        w_down_spec = P(model_ax, None, None)
+        fsdp_ax = ()
+
+    def body(router, w_gate, w_up, w_down, x_loc):
+        # x_loc: (t_loc, d) — replicated over model, sharded over data/pod
+        gates, idx, aux = router_topk(x_loc @ router, cfg)
+        if fsdp_ax:  # ZeRO-3: gather the d (or f) shard of expert weights
+            w_gate = jax.lax.all_gather(w_gate, fsdp_ax, axis=1, tiled=True)
+            w_up = jax.lax.all_gather(w_up, fsdp_ax, axis=1, tiled=True)
+            w_down = jax.lax.all_gather(w_down, fsdp_ax, axis=2, tiled=True)
+
+        eid0 = (jax.lax.axis_index(model_ax) if model_ax else 0) * e_loc
+        flat_e = idx.reshape(-1)
+        tok = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), k)
+        mine = (flat_e >= eid0) & (flat_e < eid0 + e_loc)
+        pos = _local_dispatch_positions(flat_e, t_loc * k, e)
+        keep = mine & (pos < cap)
+        loc_e = jnp.clip(flat_e - eid0, 0, e_loc - 1)
+        safe_pos = jnp.where(keep, pos, cap - 1)
+
+        buf = jnp.zeros((e_loc, cap, d), x_loc.dtype)
+        buf = buf.at[loc_e, safe_pos].add(
+            x_loc[tok] * keep[:, None].astype(x_loc.dtype))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * \
+            jnp.einsum("ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+        slot_out = out_buf[loc_e, safe_pos] * keep[:, None].astype(x_loc.dtype)
+        y = jnp.zeros_like(x_loc).at[tok].add(
+            slot_out * gates.reshape(-1)[:, None].astype(x_loc.dtype))
+        if model_ax:
+            y = jax.lax.psum(y, model_ax)
+            aux = jax.lax.pmean(aux, model_ax)
+        return y, aux
+
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), w_spec, w_spec, w_down_spec, P(batch_ax, None)),
+        out_specs=(P(batch_ax, None), P()),
+        check_vma=False)
+    y, aux = smapped(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    return y, aux
+
+
+USE_EP = True   # launch layer may disable EP per cell (671B decode: §Perf S3)
+
+
+def set_use_ep(flag: bool) -> None:
+    global USE_EP
+    USE_EP = flag
+
+
+def moe_fwd(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (T, d) flat tokens -> (y (T, d), aux_loss).
+
+    Dispatches to the expert-parallel shard_map path when a distributed mesh
+    is active (launch/dryrun, launch/train), else the local jit path.
+    """
+    active = shd._ACTIVE
+    if USE_EP and active and active[0][0].size > 1:
+        mesh, rules = active[0]
+        return moe_fwd_ep(p, x, cfg, mesh, rules)
+    return _moe_fwd_local(p, x, cfg)
+
+
+def _moe_fwd_local(p: dict, x: jax.Array, cfg: ArchConfig
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Single-device reference path (also the oracle for EP-path tests)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = int(t * k / e * cfg.capacity_factor) + 1
+
+    gates, idx, aux = router_topk(x @ p["router"], cfg)
+
+    # ---- sort-based position-in-expert (O(T·k) memory) ----
+    flat_e = idx.reshape(-1)                                # (T*k,)
+    order = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                    # (E,)
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap                                        # capacity drop
+
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)     # token of each slot
+    safe_pos = jnp.where(keep, pos, cap - 1)
+
+    # ---- dispatch: scatter into (E, C, d); EP shuffle happens here ----
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        x[tok] * keep[:, None].astype(x.dtype))
+    buf = shd.constrain_logical(buf, ("experts", "expert_capacity", None))
+
+    # ---- batched per-expert SwiGLU (MXU) ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = shd.constrain_logical(out_buf,
+                                    ("experts", "expert_capacity", None))
+
+    # ---- combine: gather back, weight by gates ----
+    slot_out = out_buf[flat_e, safe_pos] * keep[:, None].astype(x.dtype)
+    y = jnp.zeros_like(x).at[tok].add(
+        slot_out * gates.reshape(-1)[:, None].astype(x.dtype))
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    return y, aux

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (OptState, adamw_init, adamw_update,
+                               clip_by_global_norm, opt_state_spec)
+from repro.optim.schedules import constant, cosine, wsd
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "opt_state_spec", "constant", "cosine", "wsd"]

@@ -1,0 +1,88 @@
+"""AdamW with ZeRO-friendly state layout.
+
+The first/second moments mirror the parameter pytree (and therefore inherit
+the parameters' FSDP sharding — on the production mesh the optimizer state
+is fully sharded over the ``data`` axis, which is what makes 123B/671B
+trainable on 16 GB/chip).  Moments are f32 regardless of param dtype
+(bf16-safe), master weights stay in the param dtype + f32 rounding on update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pm
+from repro.models.params import ParamSpec
+
+
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array          # ()
+    mu: Any                  # first moment, f32, like params
+    nu: Any                  # second moment, f32, like params
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.step, s.mu, s.nu), None),
+    lambda aux, children: OptState(*children))
+
+
+def adamw_init(params: Any) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(f32, params),
+                    nu=jax.tree.map(f32, params))
+
+
+def opt_state_spec(param_spec: Any) -> OptState:
+    """ParamSpec tree for the optimizer state (dry-run: shapes + axes only)."""
+    as_f32 = lambda s: dataclasses.replace(s, init="zeros", dtype=jnp.float32)
+    return OptState(
+        step=ParamSpec((), (), "zeros", dtype=jnp.int32),
+        mu=jax.tree.map(as_f32, param_spec, is_leaf=pm.is_spec),
+        nu=jax.tree.map(as_f32, param_spec, is_leaf=pm.is_spec))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, *,
+                 lr: float | jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}

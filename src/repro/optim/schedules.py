@@ -1,0 +1,37 @@
+"""LR schedules: constant, cosine, and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * \
+            (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.01):
+    """MiniCPM's warmup-stable-decay: linear warmup, long plateau,
+    short exponential-ish (here linear) decay to final_frac*lr."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        plateau = jnp.asarray(lr, jnp.float32)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * (final_frac ** prog)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, plateau, dec))
+    return f

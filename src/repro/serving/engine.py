@@ -1,0 +1,121 @@
+"""Batched serving engine: slot-based continuous batching over a shared
+decode step.
+
+The engine owns a fixed pool of ``batch`` sequence slots backed by one
+stacked KV cache (so decode is a single batched ``decode_step`` call — the
+TPU-efficient shape).  Requests are admitted into free slots, prefilled
+one-at-a-time into their slot's cache stripe, then decoded jointly; finished
+slots are recycled (continuous batching).  Greedy sampling (argmax) keeps
+the engine deterministic for tests; a temperature hook is provided.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as mdl
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params: Any, cfg: ArchConfig, *, batch: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.caches = mdl.init_cache(cfg, batch, max_len)
+        self.slot_req: list[Request | None] = [None] * batch
+        self.slot_pos = jnp.zeros((batch,), jnp.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self._decode = jax.jit(
+            lambda p, t, c: mdl.decode_step(p, cfg, t, c))
+        self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Prefill a single slot: run the prompt with a batch-1 cache, then
+        scatter the stripe into the pooled cache."""
+        cfg = self.cfg
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        c1 = mdl.init_cache(cfg, 1, self.max_len)
+        logits, c1 = mdl.prefill(self.params, cfg, prompt, c1)
+
+        def place(pool, one):
+            if one.dtype == jnp.int32:
+                # decode-position leaves: uniform-admission engine keeps the
+                # pool position at the max filled prompt length
+                return jnp.maximum(pool, one.astype(pool.dtype))
+            # batch axis differs by cache kind; find the axis of size 1
+            for ax in range(one.ndim):
+                if one.shape[ax] == 1 and pool.shape[ax] == self.batch:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        pool, one.astype(pool.dtype), slot, axis=ax)
+            return pool
+
+        self.caches = jax.tree.map(place, self.caches, c1)
+        # indices are per-layer scalars stacked (rep,) — shared across slots;
+        # continuous batching with ragged starts keeps per-slot positions:
+        self.slot_pos = self.slot_pos.at[slot].set(len(req.prompt))
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
+        self.slot_req[slot] = req
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One engine tick: admit, batched-decode, retire. Returns finished."""
+        self._admit()
+        live = [s for s, r in enumerate(self.slot_req) if r is not None]
+        finished: list[Request] = []
+        if not live:
+            return finished
+
+        logits, self.caches = self._decode(
+            self.params, self.cur_tokens, self.caches)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        for slot in live:
+            req = self.slot_req[slot]
+            tok = int(next_tok[slot])
+            req.out.append(tok)
+            self.slot_pos = self.slot_pos.at[slot].add(1)
+            self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
+            if len(req.out) >= req.max_new_tokens or \
+                    int(self.slot_pos[slot]) + 1 >= self.max_len:
+                req.done = True
+                finished.append(req)
+                self.slot_req[slot] = None
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return done

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# 512-device flag in its own process) — ensure no leakage.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

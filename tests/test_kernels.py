@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops, ref
+from repro.kernels import rmsnorm as rn
+from repro.kernels import ssd_scan
+from repro.kernels import vmul_reduce as vr
+
+KEYS = jax.random.split(jax.random.PRNGKey(0), 16)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# vmul_reduce
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 127, 128, 4096, 5000, 16384])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vmul_reduce_sweep(n, dtype):
+    a = jax.random.normal(KEYS[0], (n,), dtype)
+    b = jax.random.normal(KEYS[1], (n,), dtype)
+    out = vr.vmul_reduce(a, b, interpret=True)
+    want = ref.vmul_reduce(a, b)
+    np.testing.assert_allclose(np.float32(out), np.float32(want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2)
+
+
+def test_vmul_reduce_paper_datasize():
+    """The paper's exact workload: 16 KB of data (§III)."""
+    n = 16 * 1024 // 4
+    a = jax.random.normal(KEYS[2], (n,))
+    b = jax.random.normal(KEYS[3], (n,))
+    np.testing.assert_allclose(vr.vmul_reduce(a, b, interpret=True),
+                               ref.vmul_reduce(a, b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 128), (4, 17, 256), (2, 8, 64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEYS[4], shape, dtype)
+    w = jax.random.normal(KEYS[5], (shape[-1],), dtype)
+    out = rn.rmsnorm(x, w, interpret=True)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref.rmsnorm(x, w)),
+                               **tol(dtype))
+
+
+def test_rmsnorm_grad_matches_reference():
+    x = jax.random.normal(KEYS[6], (4, 8, 256))
+    w = jax.random.normal(KEYS[7], (256,))
+    g1 = jax.grad(lambda x_, w_: jnp.sum(ops.rmsnorm(x_, w_)), (0, 1))(x, w)
+    g2 = jax.grad(lambda x_, w_: jnp.sum(ref.rmsnorm(x_, w_)), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa_sweep(hq, hkv, causal):
+    b, s, d = 2, 256, 32
+    q = jax.random.normal(KEYS[8], (b, hq, s, d))
+    k = jax.random.normal(KEYS[9], (b, hkv, s, d))
+    v = jax.random.normal(KEYS[10], (b, hkv, s, d))
+    out = fa.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    b, h, s, d = 1, 2, 512, 32
+    q, k, v = (jax.random.normal(KEYS[i], (b, h, s, d)) for i in (1, 2, 3))
+    out = fa.flash_attention(q, k, v, causal=True, window=window,
+                             interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap_and_scale():
+    b, h, s, d = 1, 2, 256, 64
+    q, k, v = (jax.random.normal(KEYS[i], (b, h, s, d)) for i in (4, 5, 6))
+    out = fa.flash_attention(q, k, v, causal=True, softcap=30.0, scale=0.1,
+                             interpret=True)
+    want = ref.attention(q, k, v, causal=True, softcap=30.0, scale=0.1)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    b, h, s, d = 1, 4, 256, 64
+    q, k, v = (jax.random.normal(KEYS[i], (b, h, s, d), dtype)
+               for i in (7, 8, 9))
+    out = fa.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.float32(out), np.float32(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_blocks_divide_check():
+    q = jnp.zeros((1, 1, 100, 32))
+    with pytest.raises(ValueError):
+        fa.flash_attention(q, q, q, block_q=64, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (256, 64)])
+@pytest.mark.parametrize("h,p,n", [(2, 16, 8), (4, 32, 16)])
+def test_ssd_kernel_vs_naive(s, chunk, h, p, n):
+    b = 2
+    x = jax.random.normal(KEYS[11], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(KEYS[12], (b, s, h))) * 0.1
+    bm = jax.random.normal(KEYS[13], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(KEYS[14], (b, s, h, n)) * 0.5
+    y, fs = ssd_scan.ssd(x, a, bm, cm, chunk=chunk, interpret=True)
+    y_ref, fs_ref = ref.ssd_naive(x, a, bm, cm)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fs).reshape(fs_ref.shape), fs_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_jnp_matches_naive():
+    b, s, h, p, n = 1, 128, 2, 16, 8
+    x = jax.random.normal(KEYS[15], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(KEYS[0], (b, s, h))) * 0.2
+    bm = jax.random.normal(KEYS[1], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(KEYS[2], (b, s, h, n)) * 0.5
+    y = ref.ssd_chunked(x, a, bm, cm, chunk=32)
+    y_ref, _ = ref.ssd_naive(x, a, bm, cm)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_prefill():
+    """Prefill then N decode steps == full-sequence SSD."""
+    b, s, h, p, n = 1, 32, 2, 8, 4
+    pre = 24
+    x = jax.random.normal(KEYS[3], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(KEYS[4], (b, s, h))) * 0.2
+    bm = jax.random.normal(KEYS[5], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(KEYS[6], (b, s, h, n)) * 0.5
+    y_full, _ = ref.ssd_naive(x, a, bm, cm)
+
+    y_pre, state = ops.ssd_with_state(
+        x[:, :pre], a[:, :pre], bm[:, :pre], cm[:, :pre], chunk=8)
+    np.testing.assert_allclose(y_pre, y_full[:, :pre], rtol=1e-4, atol=1e-4)
+    ys = []
+    st = state
+    for t in range(pre, s):
+        y_t, st = ops.ssd_decode_step(x[:, t], a[:, t], bm[:, t], cm[:, t], st)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_full[:, pre:],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_grad_finite():
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(KEYS[7], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(KEYS[8], (b, s, h))) * 0.2
+    bm = jax.random.normal(KEYS[9], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(KEYS[10], (b, s, h, n)) * 0.5
+    g = jax.grad(lambda *t: jnp.sum(ops.ssd(*t, chunk=16)))(x, a, bm, cm)
+    assert np.isfinite(np.float32(g)).all()

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, Overlay, PlacementPolicy, TileGrid, assemble,
+                        compile_graph, place, run_program)
+from repro.core import patterns
+from repro.core.isa import category
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import moe as moe_lib
+from repro.configs.archs import smoke_config
+
+UNARY = [patterns.NEG, patterns.ABS, patterns.RELU, patterns.SIGMOID,
+         patterns.SQRT, patterns.EXP]
+BINARY = [patterns.ADD, patterns.SUB, patterns.MUL, patterns.MAX, patterns.MIN]
+
+
+@st.composite
+def random_graph(draw):
+    """A random DAG of unary/binary ops over positive inputs."""
+    n_inputs = draw(st.integers(1, 3))
+    n_ops = draw(st.integers(1, 8))
+    size = draw(st.sampled_from([16, 64, 256]))
+    g = Graph("prop")
+    refs = [g.input(f"x{i}", (size,)) for i in range(n_inputs)]
+    for i in range(n_ops):
+        if draw(st.booleans()) or len(refs) < 2:
+            op = draw(st.sampled_from(UNARY))
+            a = draw(st.sampled_from(refs))
+            refs.append(g.apply(op, a))
+        else:
+            op = draw(st.sampled_from(BINARY))
+            a, b = draw(st.sampled_from(refs)), draw(st.sampled_from(refs))
+            refs.append(g.apply(op, a, b))
+    g.output(refs[-1])
+    return g, n_inputs, size
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1),
+       st.sampled_from([PlacementPolicy.DYNAMIC, PlacementPolicy.STATIC]))
+@settings(max_examples=30, deadline=None)
+def test_assembly_equals_direct_eval_for_random_dags(gi, seed, policy):
+    """JIT assembly is semantics-preserving for arbitrary DAGs × placements."""
+    g, n_inputs, size = gi
+    key = jax.random.PRNGKey(seed)
+    # positive inputs keep sqrt/log well-defined
+    inputs = tuple(jnp.abs(jax.random.normal(k, (size,))) + 0.1
+                   for k in jax.random.split(key, n_inputs))
+    ref = g.evaluate(*inputs)
+    grid = TileGrid(4, 4)
+    pl = place(g, grid, policy)
+    acc = assemble(g, pl)
+    np.testing.assert_allclose(np.float32(acc(*inputs)), np.float32(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(random_graph())
+@settings(max_examples=20, deadline=None)
+def test_isa_program_structure(gi):
+    """Every compiled program: categories partition; ends with BARRIER;
+    one VEXEC per op node; LD_STREAM count == graph inputs."""
+    g, n_inputs, _ = gi
+    pl = place(g, TileGrid(4, 4), PlacementPolicy.DYNAMIC)
+    prog = compile_graph(g, pl)
+    mix = prog.mix()
+    assert sum(mix.values()) == len(prog)
+    n_vexec = sum(1 for i in prog.instructions
+                  if i.opcode.name.startswith("VEXEC"))
+    assert n_vexec == len([n for n in g.op_nodes() if n.kind == "op"])
+    assert prog.instructions[-1].opcode.name == "BARRIER"
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_eager_isa_matches_assembled(gi, seed):
+    g, n_inputs, size = gi
+    key = jax.random.PRNGKey(seed)
+    inputs = tuple(jnp.abs(jax.random.normal(k, (size,))) + 0.1
+                   for k in jax.random.split(key, n_inputs))
+    pl = place(g, TileGrid(4, 4), PlacementPolicy.DYNAMIC)
+    out_isa = run_program(compile_graph(g, pl), g, inputs)
+    out_asm = assemble(g, pl)(*inputs)
+    np.testing.assert_allclose(np.float32(out_isa), np.float32(out_asm),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_vmul_reduce_kernel_arbitrary_lengths(n, seed):
+    key = jax.random.PRNGKey(seed)
+    a, b = jax.random.normal(key, (2, n))
+    np.testing.assert_allclose(
+        kops.vmul_reduce(a, b, interpret=True), kref.vmul_reduce(a, b),
+        rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_placement_invariance_to_chunk(log2_chunk, seed):
+    """SSD output must not depend on the chunking (associativity)."""
+    chunk = 2 ** log2_chunk
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.2
+    bm = jax.random.normal(ks[2], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    y = kref.ssd_chunked(x, a, bm, cm, chunk=chunk)
+    y_ref, _ = kref.ssd_naive(x, a, bm, cm)
+    np.testing.assert_allclose(y, y_ref, rtol=5e-4, atol=5e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(8, 64))
+@settings(max_examples=15, deadline=None)
+def test_router_gates_are_normalized_and_conserved(seed, tokens):
+    """Top-k router invariants: gates >= 0, sum to 1 per token."""
+    cfg = smoke_config("granite-moe-1b-a400m")
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (tokens, cfg.num_experts))
+    gates, idx, aux = moe_lib.router_topk(logits, cfg)
+    assert gates.shape == (tokens, cfg.experts_per_token)
+    assert np.all(np.float32(gates) >= 0)
+    np.testing.assert_allclose(np.sum(np.float32(gates), -1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(idx) >= 0)
+    assert np.all(np.asarray(idx) < cfg.num_experts)
+    # top-k indices are distinct per token
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == len(row)
+    assert np.isfinite(float(aux))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_moe_capacity_1_output_is_bounded(seed):
+    """With ample capacity, MoE output is finite and token-local."""
+    cfg = smoke_config("granite-moe-1b-a400m").scaled(capacity_factor=4.0)
+    from repro.models import params as pm
+    p = pm.init(moe_lib.moe_spec(cfg), jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (32, cfg.d_model),
+                          jnp.bfloat16)
+    y, aux = moe_lib.moe_fwd(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.float32(y)).all()
