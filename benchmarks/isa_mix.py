@@ -17,15 +17,34 @@ import jax.numpy as jnp
 from benchmarks.common import row
 from repro.core import (PlacementPolicy, TileGrid, branchy_graph,
                         compile_graph, place, run_program, saxpy_graph,
-                        vmul_reduce_graph)
+                        trace_to_graph, vmul_reduce_graph)
+from repro.core import patterns
 from repro.core.isa import Opcode
+
+
+def traced_graphs(n: int) -> list:
+    """The same workloads through the trace frontend (plain source code)."""
+    sds = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def rms_energy(x, w):
+        return jnp.sqrt(jnp.sum((x * w) * (x * w)) * jnp.float32(1.0 / n))
+
+    def branchy(x):
+        return jnp.where(jnp.sum(x) > 0, jnp.sqrt(jnp.abs(x)), jnp.sin(x))
+
+    return [trace_to_graph(rms_energy, sds, sds, name="traced_rms").graph,
+            trace_to_graph(branchy, sds, name="traced_branchy").graph]
 
 
 def main() -> list[str]:
     rows = []
     rows.append(row("isa/total_opcodes", float(len(Opcode)), "paper=42"))
+    rows.append(row("isa/registered_primitives",
+                    float(len(patterns.registered_primitives())),
+                    "trace_frontend_dispatch"))
 
-    graphs = [vmul_reduce_graph(4096), saxpy_graph(4096), branchy_graph(4096)]
+    graphs = ([vmul_reduce_graph(4096), saxpy_graph(4096), branchy_graph(4096)]
+              + traced_graphs(4096))
     for g in graphs:
         for policy in (PlacementPolicy.DYNAMIC, PlacementPolicy.STATIC):
             pl = place(g, TileGrid(3, 3), policy)

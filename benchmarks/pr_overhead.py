@@ -2,9 +2,17 @@
 
 The paper measures ~1.250 ms per PR bitstream download and amortizes it at
 startup (C3).  The TPU analogue: a BitstreamCache miss pays the XLA compile;
-a hit is a dictionary lookup.  We report both, the implied amortization
-horizon (#calls until overhead < 1% of cumulative execution), and the paper's
-own number for comparison.
+a hit is a dictionary lookup.  With the trace frontend the startup cost has
+two parts, reported separately so the "only incurred at startup" claim stays
+measured end to end:
+
+  * trace+lowering — capture the plain function and resolve its jaxpr
+    against the operator library (pure frontend, Python-side),
+  * placement/ISA/compile — place the graph, emit the controller program and
+    pay the XLA compile on the cache miss.
+
+We report both, the hit path, the implied amortization horizon (#calls until
+overhead < 1% of cumulative execution), and the paper's own number.
 """
 
 from __future__ import annotations
@@ -12,10 +20,11 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import row, time_call
 from repro.configs.archs import PAPER_PR_OVERHEAD_MS, PAPER_VECTOR_LEN
-from repro.core import Overlay, vmul_reduce_graph
+from repro.core import Overlay
 
 
 def main() -> list[str]:
@@ -25,24 +34,35 @@ def main() -> list[str]:
     b = jax.random.normal(jax.random.PRNGKey(1), (n,))
 
     ov = Overlay(3, 3)
-    g = vmul_reduce_graph(n)
 
-    # miss: assemble + first call (compile happens on first execution)
+    def vmul_reduce(x, y):
+        return jnp.sum(x * y)
+
+    # miss: trace + assemble + first call (compile happens on first run)
+    jitted = ov.jit(vmul_reduce)
     t0 = time.perf_counter()
-    acc = ov.assemble(g)
-    jax.block_until_ready(acc(a, b))
+    jax.block_until_ready(jitted(a, b))
     miss_us = (time.perf_counter() - t0) * 1e6
-    rows.append(row("pr_overhead/miss_first_call", miss_us, "assemble+compile"))
+    timing = jitted.timings(a, b)
+    rows.append(row("pr_overhead/trace_lower", timing["trace_seconds"] * 1e6,
+                    "frontend: jaxpr->operators"))
+    rows.append(row("pr_overhead/place_isa_assemble",
+                    timing["assemble_seconds"] * 1e6,
+                    "placement+ISA+cache_insert"))
+    rows.append(row("pr_overhead/miss_first_call", miss_us,
+                    "trace+assemble+compile"))
 
-    # hit: re-assemble the same graph — cache returns the jitted fn
+    # hit: a fresh entry point over the same function — the frontend traces
+    # again but the assembled bitstream comes straight from the cache
+    jitted2 = ov.jit(vmul_reduce)
     t0 = time.perf_counter()
-    acc2 = ov.assemble(g)
-    jax.block_until_ready(acc2(a, b))
+    jax.block_until_ready(jitted2(a, b))
     hit_us = (time.perf_counter() - t0) * 1e6
     rows.append(row("pr_overhead/hit_reassembly", hit_us,
                     f"hits={ov.cache.stats.hits}"))
 
-    steady_us = time_call(acc2.fn, a, b)
+    acc = jitted.accelerator(a, b)
+    steady_us = time_call(acc.fn, a, b)
     rows.append(row("pr_overhead/steady_state_call", steady_us, ""))
 
     # amortization horizon: calls until (miss - steady) < 1% of cumulative

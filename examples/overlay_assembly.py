@@ -1,20 +1,24 @@
 """Overlay assembly of a MODEL step — the paper's flow at framework scale.
 
-A transformer forward pass is assembled from registered stage operators
-(embed → layer-groups → head), exactly the way the paper assembles
-accelerators from pre-synthesized bitstreams.  Shows: stage placement on the
-tile grid, the controller ISA program, the bitstream cache, and static-vs-
-dynamic placement of the pipeline.
+A transformer forward pass is captured by the trace frontend: ``overlay.jit``
+lowers the step's jaxpr onto the operator library (registered Pallas kernels
+become single LARGE bitstream nodes; everything else stays fused XLA
+residue), places the nodes on the tile grid, compiles the controller ISA and
+caches the assembled executable.  Shows: the lowered operator inventory, the
+ISA program, the bitstream cache, and static-vs-dynamic placement of the
+same lowered graph.  The stage-operator Graph path
+(``models.model.build_step_graph``) remains the low-level IR alternative.
 
     PYTHONPATH=src python examples/overlay_assembly.py
 """
+
+import collections
 
 import jax
 import numpy as np
 
 from repro.configs.archs import smoke_config
 from repro.core import Overlay, PlacementPolicy, TileGrid, assemble, place
-from repro.models import model as mdl
 from repro.models import params as pm
 from repro.models import transformer as tfm
 from repro.models.transformer import model_spec
@@ -26,41 +30,51 @@ def main():
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
                                 cfg.vocab_size)
 
-    # the model step as a dataflow graph of stage operators
-    g = mdl.build_step_graph(cfg, (2, 16))
-    print(f"model step graph: {[n.name for n in g.op_nodes()]}")
+    def step(p, tok):
+        h, _, _ = tfm.forward(p, cfg, tok)
+        return tfm.unembed(p, h, cfg)
 
-    # dynamic overlay: stages land contiguous -> pipelined, fusable
+    # trace-based frontend: the plain step function becomes the accelerator
     ov = Overlay(3, 3)
-    acc = ov.assemble(g, jit=False)
-    print(f"dynamic placement: {acc.placement.assignment} "
-          f"(pass-through={acc.placement.total_passthrough})")
-    print(f"ISA program: {len(acc.program)} instructions "
-          f"{acc.instruction_mix}")
+    fwd = ov.jit(step, strict=False, name=f"{cfg.name}.fwd")
+    logits = fwd(params, tokens)
 
-    logits = acc(params, tokens)
+    lowered = fwd.lower(params, tokens)
+    names = [n.op.name if n.op is not None else "select"
+             for n in lowered.graph.op_nodes()]
+    ops = collections.Counter(nm.split("[")[0] + "[..]" if "[" in nm else nm
+                              for nm in names)
+    print(f"lowered {cfg.name}.fwd: {len(lowered.graph.op_nodes())} operators "
+          f"({dict(ops.most_common(6))} ...)")
+    print(f"XLA residue primitives: {sorted(set(lowered.unmapped))}")
+
+    acc = fwd.accelerator(params, tokens)
+    print(f"ISA program: {len(acc.program)} instructions {acc.instruction_mix}")
+    print(f"dynamic placement pass-through: {acc.placement.total_passthrough}")
 
     # reference: direct forward
-    h, _, _ = tfm.forward(params, cfg, tokens)
-    ref = tfm.unembed(params, h, cfg)
+    ref = step(params, tokens)
     np.testing.assert_allclose(np.float32(logits), np.float32(ref),
                                rtol=2e-3, atol=2e-3)
     print(f"overlay-assembled logits match direct forward "
           f"(max |Δ| = {float(abs(np.float32(logits) - np.float32(ref)).max()):.2e})")
 
-    # static overlay: stages scattered -> pass-through tiles appear
-    ops = g.op_nodes()
+    # static overlay: the same lowered graph, operators scattered -> the
+    # pass-through tiles the paper's static baseline pays (Fig. 3)
+    g = lowered.graph
     corners = [(0, 0), (2, 2), (0, 2), (2, 0), (1, 1)]
-    fixed = {n.node_id: corners[i % len(corners)] for i, n in enumerate(ops)}
+    fixed = {n.node_id: corners[i % len(corners)]
+             for i, n in enumerate(g.op_nodes())}
     pl = place(g, TileGrid(3, 3, large_fraction=1.0), PlacementPolicy.STATIC,
                fixed)
     acc_static = assemble(g, pl)
     print(f"static placement pass-through tiles: {pl.total_passthrough} "
           f"(dynamic had {acc.placement.total_passthrough})")
-    np.testing.assert_allclose(
-        np.float32(acc_static(params, tokens)), np.float32(ref),
-        rtol=2e-3, atol=2e-3)
+    flat = jax.tree.leaves((params, tokens))
+    np.testing.assert_allclose(np.float32(acc_static.fn(*flat)),
+                               np.float32(ref), rtol=2e-3, atol=2e-3)
     print("static placement still correct — just slower routes (Fig. 3)")
+    print(f"overlay: {ov.describe()}")
 
 
 if __name__ == "__main__":

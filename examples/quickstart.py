@@ -1,8 +1,12 @@
 """Quickstart: assemble a custom accelerator the paper's way.
 
-The user composes library patterns symbolically; the dynamic overlay places
-them in contiguous tiles and JIT-assembles the accelerator — no CAD tools,
-no synthesis, no place-and-route (paper claim C1).
+The user writes an *ordinary JAX function* — no hardware programming model,
+no CAD tools, no place-and-route (paper claim C1).  ``overlay.jit`` traces
+it, resolves each primitive against the operator ("bitstream") library,
+places the operators in contiguous tiles on the 3x3 fabric and JIT-assembles
+the accelerator.  The hand-built ``Graph`` API remains available as the
+low-level IR; both routes produce the *same* placement, ISA program and
+numerics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,46 +17,81 @@ import jax.numpy as jnp
 from repro.core import Graph, Overlay, patterns
 
 
-def main():
-    # 1. compose: RMS energy of a filtered signal -------------------------
-    #    y = sqrt(mean((x * window)^2))
-    n = 16 * 1024 // 4                      # the paper's 16 KB working set
+N = 16 * 1024 // 4                          # the paper's 16 KB working set
+
+
+def rms_energy(x, window):
+    """RMS energy of a filtered signal: sqrt(mean((x * window)^2))."""
+    filtered = x * window
+    squared = filtered * filtered
+    total = jnp.sum(squared)
+    mean = total * jnp.float32(1.0 / N)
+    return jnp.sqrt(mean)
+
+
+def manual_graph() -> Graph:
+    """The same computation through the low-level Graph IR."""
     g = Graph("rms_energy")
-    x = g.input("x", (n,))
-    w = g.input("window", (n,))
-    filtered = g.apply(patterns.make_zip_with(patterns.MUL), x, w,
-                       name="VMUL")
+    x = g.input("x", (N,))
+    w = g.input("window", (N,))
+    filtered = g.apply(patterns.make_zip_with(patterns.MUL), x, w, name="VMUL")
     squared = g.apply(patterns.make_zip_with(patterns.MUL), filtered,
                       filtered, name="square")
-    total = g.apply(patterns.make_reduce(patterns.ADD), squared,
-                    name="Reduce")
-    mean = g.apply(patterns.MUL, total, g.const(jnp.float32(1.0 / n)),
+    total = g.apply(patterns.make_reduce(patterns.ADD), squared, name="Reduce")
+    mean = g.apply(patterns.MUL, total, g.const(jnp.float32(1.0 / N)),
                    name="scale")
     g.output(g.apply(patterns.SQRT, mean, name="sqrtf"))
+    return g
 
-    # 2. assemble: the runtime interpreter places operators on the 3x3
-    #    overlay and builds the fused executable ---------------------------
+
+def main():
     overlay = Overlay(rows=3, cols=3)        # the paper's evaluated fabric
-    acc = overlay.assemble(g)
 
-    print(f"graph        : {g.name} ({len(g.op_nodes())} operators)")
+    # 1. the programming model: trace an ordinary function -----------------
+    rms = overlay.jit(rms_energy)
+
+    key = jax.random.PRNGKey(0)
+    sig = jax.random.normal(key, (N,))
+    win = jnp.hanning(N).astype(jnp.float32)
+    out = rms(sig, win)                      # trace -> place -> assemble -> run
+
+    acc = rms.accelerator(sig, win)
+    print(f"function     : rms_energy "
+          f"({len(acc.placement.assignment)} operators after lowering)")
+    print(f"operators    : "
+          f"{[n.op.name for n in rms.lower(sig, win).graph.op_nodes()]}")
     print(f"placement    : {acc.placement.assignment}")
     print(f"pass-through : {acc.placement.total_passthrough} "
           f"(dynamic overlay keeps operators contiguous)")
     print(f"ISA program  : {len(acc.program)} instructions, "
           f"mix={acc.instruction_mix}")
 
-    # 3. run ---------------------------------------------------------------
-    key = jax.random.PRNGKey(0)
-    sig = jax.random.normal(key, (n,))
-    win = jnp.hanning(n).astype(jnp.float32)
-    out = acc(sig, win)
     ref = jnp.sqrt(jnp.mean((sig * win) ** 2))
     print(f"result       : {float(out):.6f} (reference {float(ref):.6f})")
 
-    # 4. re-assembly is a bitstream-cache hit (paper C3: configure once) ---
+    # 2. the low-level IR produces the identical accelerator ---------------
+    g = manual_graph()
+    acc_manual = overlay.assemble(g)
+    same = (acc_manual.placement.assignment == acc.placement.assignment
+            and acc_manual.instruction_mix == acc.instruction_mix
+            and float(acc_manual(sig, win)) == float(out))
+    print(f"manual Graph : identical placement/ISA/numerics = {same}")
+
+    # 3. re-running is a bitstream-cache hit (paper C3: configure once) ----
+    rms(sig, win)
     overlay.assemble(g)
     print(f"cache        : {overlay.describe()['cache']}")
+
+    # 4. AOT: populate the cache before traffic arrives --------------------
+    aot_overlay = Overlay(3, 3)
+    sds = jax.ShapeDtypeStruct((N,), jnp.float32)
+    aot_overlay.aot(rms_energy, sds, sds)
+    print(f"aot          : compile paid up front "
+          f"({aot_overlay.cache.stats.compile_seconds * 1e3:.2f} ms)")
+    served = aot_overlay.jit(rms_energy)     # a fresh entry point at serve time
+    served(sig, win)
+    print(f"aot cache    : {aot_overlay.describe()['cache']} "
+          f"(serve-time assembly was a pure hit)")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 Uses the real stack — synthetic Markov data pipeline, AdamW + cosine,
 fault-tolerant Supervisor with async checkpointing — on a CPU-sized slice of
-the minicpm-2b family (~100M params at width 512).
+the minicpm-2b family (~100M params at width 512).  The train step runs
+through the overlay JIT-assembly frontend (``--assemble-overlay``): traced
+once, lowered onto the operator library, held in the bitstream cache.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
@@ -36,7 +38,7 @@ def main():
         "--arch", "minicpm-100m", "--steps", str(args.steps),
         "--batch", "4", "--seq", "128", "--lr", "1e-3",
         "--schedule", "wsd", "--ckpt-dir", args.ckpt_dir,
-        "--ckpt-every", "50", "--log-every", "10"])
+        "--ckpt-every", "50", "--log-every", "10", "--assemble-overlay"])
 
 
 if __name__ == "__main__":

@@ -1,13 +1,16 @@
 """Core library: the paper's dynamic overlay + JIT assembly, TPU-native.
 
-Public API:
+Public API (frontend first — the paper's programming model):
+  overlay.Overlay / jit_assemble / default_overlay — trace-based frontend:
+      plain JAX functions -> placed, ISA-compiled, cached accelerators
+  trace.trace_to_graph / Lowered / TraceError — jaxpr -> Graph lowering
   patterns.LIBRARY / Operator / TileClass     — operator ("bitstream") library
-  graph.Graph / vmul_reduce_graph             — symbolic DFG composition
+  patterns.register_op / register_call        — primitive->Operator registry
+  graph.Graph / vmul_reduce_graph             — low-level symbolic DFG IR
   placement.TileGrid / PlacementPolicy        — static vs dynamic placement
   isa.compile_graph / Program / Opcode        — 42-instruction controller ISA
   interpreter.run_program / assemble          — eager ISA + JIT assembly
   cache.BitstreamCache                        — compiled-artifact (PR) cache
-  overlay.Overlay                             — facade
 """
 
 from repro.core.cache import BitstreamCache, aot_compile, cache_key, signature_of
@@ -15,16 +18,21 @@ from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_grap
 from repro.core.interpreter import (AssembledAccelerator, assemble,
                                     assemble_sharded, run_program, wrap_sharded)
 from repro.core.isa import Instruction, Opcode, Program, compile_graph
-from repro.core.overlay import Overlay
-from repro.core.patterns import LIBRARY, Operator, TileClass
+from repro.core.overlay import (JitAssembled, Overlay, default_overlay,
+                                jit_assemble)
+from repro.core.patterns import (LIBRARY, Operator, TileClass, register_call,
+                                 register_op)
 from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
                                   TileGrid, place, place_dynamic, place_static)
+from repro.core.trace import Lowered, TraceError, trace_to_graph
 
 __all__ = [
-    "AssembledAccelerator", "BitstreamCache", "Graph", "Instruction", "LIBRARY",
-    "Opcode", "Operator", "Overlay", "Placement", "PlacementError",
-    "PlacementPolicy", "Program", "TileClass", "TileGrid", "aot_compile",
-    "assemble", "assemble_sharded", "branchy_graph", "cache_key",
-    "compile_graph", "place", "place_dynamic", "place_static", "run_program",
-    "saxpy_graph", "signature_of", "vmul_reduce_graph", "wrap_sharded",
+    "AssembledAccelerator", "BitstreamCache", "Graph", "Instruction",
+    "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
+    "Placement", "PlacementError", "PlacementPolicy", "Program", "TileClass",
+    "TileGrid", "TraceError", "aot_compile", "assemble", "assemble_sharded",
+    "branchy_graph", "cache_key", "compile_graph", "default_overlay",
+    "jit_assemble", "place", "place_dynamic", "place_static", "register_call",
+    "register_op", "run_program", "saxpy_graph", "signature_of",
+    "trace_to_graph", "vmul_reduce_graph", "wrap_sharded",
 ]

@@ -37,9 +37,9 @@ def signature_of(args: tuple) -> tuple:
 
 
 def cache_key(name: str, signature: tuple, mesh_desc: str = "",
-              placement_desc: str = "") -> str:
+              placement_desc: str = "", extra: str = "") -> str:
     h = hashlib.sha256(
-        repr((name, signature, mesh_desc, placement_desc)).encode()
+        repr((name, signature, mesh_desc, placement_desc, extra)).encode()
     ).hexdigest()[:16]
     return f"{name}:{h}"
 
@@ -96,6 +96,15 @@ class BitstreamCache:
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.stats.evictions += 1
+
+    def evict_prefix(self, prefix: str) -> int:
+        """Explicitly free all bitstreams whose key starts with ``prefix``
+        (PR-region management: ``Overlay.evict``).  Returns entries removed."""
+        doomed = [k for k in self._store if k.startswith(prefix)]
+        for k in doomed:
+            del self._store[k]
+        self.stats.evictions += len(doomed)
+        return len(doomed)
 
     def clear(self) -> None:
         self._store.clear()

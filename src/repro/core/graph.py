@@ -17,13 +17,15 @@ branching (documented in DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import patterns
-from repro.core.patterns import Operator, TileClass
+from repro.core.patterns import Operator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +71,7 @@ class Graph:
         self.nodes: list[Node] = []
         self.input_ids: list[int] = []
         self.output_ids: list[int] = []
+        self._shape_cache: dict[int, Any] | None = None
 
     # --- construction -------------------------------------------------------
     def _add(self, kind: str, op: Operator | None, inputs: Sequence[NodeRef | int],
@@ -80,6 +83,7 @@ class Graph:
         node = Node(node_id=len(self.nodes), kind=kind, op=op, inputs=ids,
                     name=name, payload=payload)
         self.nodes.append(node)
+        self._shape_cache = None
         return NodeRef(self, node.node_id)
 
     def input(self, name: str, shape: Sequence[int], dtype=jnp.float32) -> NodeRef:
@@ -127,7 +131,13 @@ class Graph:
         return [(src, n.node_id) for n in self.nodes for src in n.inputs]
 
     def infer_shapes(self) -> dict[int, jax.ShapeDtypeStruct]:
-        """Abstract-evaluate every node (no FLOPs — jax.eval_shape)."""
+        """Abstract-evaluate every node (no FLOPs — jax.eval_shape).
+
+        Memoized until the graph is next mutated: traced model graphs run to
+        thousands of nodes and are validated several times per assembly.
+        """
+        if self._shape_cache is not None:
+            return self._shape_cache
         avals: dict[int, Any] = {}
         for n in self.nodes:
             if n.kind in ("input", "const"):
@@ -142,12 +152,44 @@ class Graph:
                         f"select branches disagree: {avals[t]} vs {avals[e]}")
                 avals[n.node_id] = avals[t]
             n.aval = avals[n.node_id]
+        self._shape_cache = avals
         return avals
 
     def validate(self) -> None:
         if not self.output_ids:
             raise ValueError(f"graph {self.name!r} has no outputs")
         self.infer_shapes()
+
+    def fingerprint(self) -> str:
+        """Content hash of the graph: structure, operator identities, and
+        const payloads.  Two graphs with the same name and input signature
+        but different baked-in constants (e.g. traced closures over different
+        static arguments) are *different bitstreams* — the cache keys on this.
+        """
+        h = hashlib.sha256()
+        for n in self.nodes:
+            op_id = (n.op.name, n.op.signature) if n.op is not None else None
+            h.update(repr((n.kind, n.inputs, op_id)).encode())
+            if n.kind == "const" and n.payload is not None:
+                pay = n.payload
+                shape = tuple(getattr(pay, "shape", ()))
+                dtype = str(getattr(pay, "dtype", type(pay).__name__))
+                size = int(getattr(pay, "size", 0) or np.asarray(pay).size)
+                h.update(repr((shape, dtype, size)).encode())
+                # cap hashing cost on huge constants: sample BEFORE any host
+                # transfer so a closure over a multi-GB array costs a strided
+                # copy plus a device-side checksum, not a full D2H round trip
+                if size <= (1 << 18):
+                    h.update(np.asarray(pay).tobytes())
+                else:
+                    flat = pay.ravel() if hasattr(pay, "ravel") else np.asarray(pay).ravel()
+                    stride = max(1, size // (1 << 16))
+                    h.update(np.asarray(flat[::stride]).tobytes())
+                    h.update(np.asarray(flat[-1024:]).tobytes())
+                    h.update(np.asarray(flat.sum()).tobytes())  # catches
+                    # differences the strided sample steps over
+        h.update(repr(tuple(self.output_ids)).encode())
+        return h.hexdigest()[:16]
 
     # --- direct (un-assembled) evaluation: the correctness oracle ------------
     def evaluate(self, *inputs) -> Any:
@@ -204,8 +246,7 @@ def branchy_graph(n: int, dtype=jnp.float32) -> Graph:
     x = g.input("x", (n,), dtype)
     mean = g.apply(patterns.make_reduce(patterns.ADD), x, name="sum")
     zero = g.const(jnp.zeros((), dtype))
-    pred = g.apply(
-        Operator("gt", 2, jnp.greater, TileClass.SMALL), mean, zero, name="pred")
+    pred = g.apply(patterns.GT, mean, zero, name="pred")
     then_v = g.apply(patterns.SQRT, g.apply(patterns.ABS, x), name="then")
     else_v = g.apply(patterns.SIN, x, name="else")
     g.output(g.select(pred, then_v, else_v))

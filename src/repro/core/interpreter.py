@@ -172,11 +172,14 @@ def _barrier_hops(v, h: int):
     multiply by an opaque 1.0 (``optimization_barrier`` makes the scalar
     opaque so XLA can neither fold the multiply nor fuse across it).
     Adjacent tiles (h == 1) pipeline freely — the paper's contiguous case —
-    so dynamic placements lower to fully fusable programs."""
-    for _ in range(max(h - 1, 0)):
-        one = jax.lax.optimization_barrier(jnp.ones((), v.dtype))
-        v = jax.lax.optimization_barrier(v * one)
-    return v
+    so dynamic placements lower to fully fusable programs.  ``v`` may be a
+    pytree (tuple-valued residue nodes): the whole bundle crosses the tile."""
+    def one_leaf(leaf):
+        for _ in range(max(h - 1, 0)):
+            one = jax.lax.optimization_barrier(jnp.ones((), leaf.dtype))
+            leaf = jax.lax.optimization_barrier(leaf * one)
+        return leaf
+    return jax.tree.map(one_leaf, v)
 
 
 def assemble(graph: Graph, placement: Placement, *,
@@ -209,13 +212,14 @@ def assemble_sharded(graph: Graph, placement: Placement, mesh: jax.sharding.Mesh
     ring = [(i, (i + 1) % n_dev) for i in range(n_dev)]
 
     def hop_fn(v, h: int):
-        for _ in range(h):
-            v = jax.lax.ppermute(v, axis, perm=ring)
-        # return to origin so downstream ops see position-independent data;
-        # the forward hops already paid the pass-through latency
-        back = [(i, (i - h) % n_dev) for i in range(n_dev)]
-        v = jax.lax.ppermute(v, axis, perm=back)
-        return v
+        def one_leaf(leaf):
+            for _ in range(h):
+                leaf = jax.lax.ppermute(leaf, axis, perm=ring)
+            # return to origin so downstream ops see position-independent
+            # data; the forward hops already paid the pass-through latency
+            back = [(i, (i - h) % n_dev) for i in range(n_dev)]
+            return jax.lax.ppermute(leaf, axis, perm=back)
+        return jax.tree.map(one_leaf, v)
 
     fn = _build_eval_fn(graph, placement, hop_fn=hop_fn)
     return AssembledAccelerator(

@@ -1,25 +1,47 @@
 """Overlay facade — the dynamic overlay the paper's runtime exposes.
 
-Ties together the tile grid, placement policy, ISA compiler, interpreter and
-BitstreamCache into the two-call API programmers get:
+The primary programming model is the *trace-based frontend* (the paper's
+actual pitch: ordinary source code, no hardware programming model):
 
-    overlay = Overlay(rows=3, cols=3)                       # build the fabric
-    acc = overlay.assemble(graph)                           # JIT assembly
-    y = acc(x_a, x_b)                                       # run
+    overlay = Overlay(rows=3, cols=3)              # build the fabric
 
-``assemble`` is idempotent and cached: re-assembling the same graph signature
-is a cache *hit* (no recompile — the paper's "only incurred at startup").
+    @overlay.jit                                   # or: acc = overlay.jit(fn)
+    def rms(x, w):
+        return jnp.sqrt(jnp.sum((x * w) ** 2) * (1.0 / x.size))
+
+    y = rms(sig, win)                              # trace -> place -> assemble
+                                                   # -> cached bitstream -> run
+
+``overlay.jit`` captures the function via ``jax.make_jaxpr``, lowers supported
+primitives onto the operator library (``patterns.register_op`` dispatch),
+builds a :class:`Graph` as IR, and feeds it through placement/ISA/assembly.
+Unmapped primitives stay as fused XLA residue unless ``strict=True``.
+
+Also provided, mirroring the paper's runtime controls:
+
+* ``Overlay.aot(fn, *avals)``   — ahead-of-time bitstream-cache population
+  (pay the "PR download" before traffic arrives),
+* ``Overlay.reconfigure()``     — flush the fabric: placements + bitstreams,
+* ``Overlay.evict(name)``       — free one accelerator's PR regions,
+* ``Overlay.assemble(graph)``   — the low-level IR path (hand-built Graphs),
+  still public, idempotent and cached: re-assembling the same graph signature
+  is a cache *hit* (the paper's "only incurred at startup").
+
+Module-level conveniences ``jit``/``jit_assemble`` run against a process-wide
+default 3x3 overlay for scripts that don't manage a fabric explicitly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 
 from repro.core import cache as cache_lib
 from repro.core import interpreter as interp
+from repro.core import trace as trace_lib
 from repro.core.cache import BitstreamCache
 from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
@@ -31,6 +53,132 @@ from repro.core.placement import (Coord, Placement, PlacementPolicy, TileGrid,
 class OverlayStats:
     assemblies: int = 0
     reconfigurations: int = 0   # placements changed between assemblies
+    traces: int = 0             # frontend captures (jit/aot signatures)
+    trace_seconds: float = 0.0  # total trace+lowering time (frontend cost)
+
+
+@dataclasses.dataclass
+class _JitEntry:
+    """One (signature, static-args) instantiation of a jitted function."""
+
+    lowered: trace_lib.Lowered
+    acc: interp.AssembledAccelerator
+    trace_seconds: float      # capture + jaxpr->Graph lowering
+    assemble_seconds: float   # placement + ISA compile + cache insert
+
+
+class JitAssembled:
+    """Callable wrapper returned by :meth:`Overlay.jit`.
+
+    Per input signature (flat shapes/dtypes + static argument values) the
+    wrapper traces once, assembles once, then dispatches straight to the
+    cached accelerator.  Pytree arguments/results are supported; the graph
+    sees one input per flat leaf.
+    """
+
+    def __init__(self, overlay: "Overlay", fn: Callable[..., Any], *,
+                 strict: bool = False, name: str | None = None,
+                 fixed: dict[int, Coord] | None = None,
+                 static_argnums: tuple[int, ...] = (),
+                 donate_argnums: tuple[int, ...] = ()) -> None:
+        self.overlay = overlay
+        self.fn = fn
+        self.strict = strict
+        self.name = name or getattr(fn, "__name__", None) or "jit"
+        self.fixed = fixed
+        self.static_argnums = tuple(static_argnums)
+        self.donate_argnums = tuple(donate_argnums)
+        self._entries: dict[str, _JitEntry] = {}
+        self.__name__ = self.name
+        self.__doc__ = getattr(fn, "__doc__", None)
+
+    # -- signature handling ---------------------------------------------------
+    def _split(self, args: tuple):
+        """Split positional args into (dynamic args, closed fn, static repr)."""
+        if not self.static_argnums:
+            return args, self.fn, ""
+        static = {i: args[i] for i in self.static_argnums if i < len(args)}
+        dyn = tuple(a for i, a in enumerate(args) if i not in static)
+
+        def closed(*dyn_args, _static=static, _n=len(args)):
+            it = iter(dyn_args)
+            full = [_static[i] if i in _static else next(it) for i in range(_n)]
+            return self.fn(*full)
+
+        closed.__name__ = self.name
+        return dyn, closed, repr(sorted(static.items()))
+
+    def _donate_leaf_indices(self, args: tuple) -> tuple[int, ...]:
+        """Expand user-level donate_argnums to flat-leaf indices."""
+        if not self.donate_argnums:
+            return ()
+        out, offset = [], 0
+        for i, a in enumerate(args):
+            if i in self.static_argnums:
+                continue
+            n = len(jax.tree.leaves(a))
+            if i in self.donate_argnums:
+                out.extend(range(offset, offset + n))
+            offset += n
+        return tuple(out)
+
+    def _entry(self, args: tuple, *, aot: bool = False,
+               _presplit=None) -> _JitEntry:
+        dyn, closed, static_repr = _presplit or self._split(args)
+        key = repr((cache_lib.signature_of(dyn),
+                    jax.tree_util.tree_structure(dyn), static_repr))
+        hit = self._entries.get(key)
+        if hit is not None:
+            return hit
+
+        t0 = time.perf_counter()
+        lowered = trace_lib.trace_to_graph(closed, *dyn, name=self.name,
+                                           strict=self.strict)
+        t1 = time.perf_counter()
+        donate = self._donate_leaf_indices(args)
+        jit_kwargs = {"donate_argnums": donate} if donate else None
+        acc = self.overlay.assemble(lowered.graph, fixed=self.fixed,
+                                    jit_kwargs=jit_kwargs, aot=aot)
+        t2 = time.perf_counter()
+
+        self.overlay.stats.traces += 1
+        self.overlay.stats.trace_seconds += t1 - t0
+        entry = _JitEntry(lowered=lowered, acc=acc,
+                          trace_seconds=t1 - t0, assemble_seconds=t2 - t1)
+        self._entries[key] = entry
+        return entry
+
+    # -- public surface -------------------------------------------------------
+    def lower(self, *args) -> trace_lib.Lowered:
+        """The lowered IR for this signature — reuses an already-traced
+        entry when one exists, else traces without assembling."""
+        dyn, closed, static_repr = self._split(args)
+        key = repr((cache_lib.signature_of(dyn),
+                    jax.tree_util.tree_structure(dyn), static_repr))
+        hit = self._entries.get(key)
+        if hit is not None:
+            return hit.lowered
+        return trace_lib.trace_to_graph(closed, *dyn, name=self.name,
+                                        strict=self.strict)
+
+    def accelerator(self, *args) -> interp.AssembledAccelerator:
+        """The assembled accelerator for this signature (traces if needed)."""
+        return self._entry(args).acc
+
+    def timings(self, *args) -> dict[str, float]:
+        """Frontend vs backend split for this signature (pr_overhead bench)."""
+        e = self._entry(args)
+        return {"trace_seconds": e.trace_seconds,
+                "assemble_seconds": e.assemble_seconds}
+
+    def __call__(self, *args):
+        presplit = self._split(args)
+        entry = self._entry(args, _presplit=presplit)
+        flat = jax.tree.leaves(presplit[0])
+        out = entry.acc.fn(*flat)
+        n_out = len(entry.lowered.graph.output_ids)
+        leaves = list(out) if n_out > 1 else [out]
+        return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
 
 
 class Overlay:
@@ -59,7 +207,40 @@ class Overlay:
         self.stats = OverlayStats()
         self._last_placement: Placement | None = None
 
-    # -- assembly -------------------------------------------------------------
+    # -- trace-based frontend -------------------------------------------------
+    def jit(self, fn: Callable[..., Any] | None = None, *,
+            strict: bool = False, name: str | None = None,
+            fixed: dict[int, Coord] | None = None,
+            static_argnums: tuple[int, ...] = (),
+            donate_argnums: tuple[int, ...] = ()) -> Callable[..., Any]:
+        """Compile a plain JAX function into an overlay accelerator.
+
+        Usable directly (``acc = overlay.jit(fn)``) or as a decorator, with
+        or without arguments.  ``strict=True`` errors on primitives without a
+        library lowering; the default leaves them as fused XLA residue.
+        ``fixed`` pins graph nodes to tiles (static-placement experiments).
+        """
+        def wrap(f: Callable[..., Any]) -> JitAssembled:
+            return JitAssembled(self, f, strict=strict, name=name, fixed=fixed,
+                                static_argnums=static_argnums,
+                                donate_argnums=donate_argnums)
+        return wrap if fn is None else wrap(fn)
+
+    def aot(self, fn: Callable[..., Any], *abstract_args,
+            strict: bool = False, name: str | None = None,
+            fixed: dict[int, Coord] | None = None) -> JitAssembled:
+        """Ahead-of-time assembly: populate the bitstream cache for a
+        signature before traffic arrives (pay the PR download at startup).
+
+        ``abstract_args`` are ``jax.ShapeDtypeStruct`` pytrees (concrete
+        arrays also work).  Returns the jitted wrapper — calling it with
+        matching concrete inputs is a pure cache hit.
+        """
+        jitted = self.jit(fn, strict=strict, name=name, fixed=fixed)
+        jitted._entry(abstract_args, aot=True)
+        return jitted
+
+    # -- assembly (low-level Graph IR path) -----------------------------------
     def plan(self, graph: Graph,
              fixed: dict[int, Coord] | None = None) -> tuple[Placement, Program]:
         """Placement + ISA program, without building the executable."""
@@ -68,8 +249,14 @@ class Overlay:
 
     def assemble(self, graph: Graph, *,
                  fixed: dict[int, Coord] | None = None,
-                 jit: bool = True) -> interp.AssembledAccelerator:
-        """JIT-assemble ``graph`` into an accelerator (cached)."""
+                 jit: bool = True,
+                 jit_kwargs: dict[str, Any] | None = None,
+                 aot: bool = False) -> interp.AssembledAccelerator:
+        """JIT-assemble ``graph`` into an accelerator (cached).
+
+        ``aot=True`` lowers AND compiles the executable eagerly (bitstream
+        pre-population); otherwise XLA compiles lazily on first call.
+        """
         placement, program = self.plan(graph, fixed)
         if self._last_placement is not None and \
                 placement.assignment != self._last_placement.assignment:
@@ -86,21 +273,46 @@ class Overlay:
         if not jit:
             return acc
 
-        graph.infer_shapes()
-        sig = cache_lib.signature_of(
-            tuple(graph.toposorted()[i].aval for i in graph.input_ids))
+        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
         key = cache_lib.cache_key(
-            graph.name, sig,
+            graph.name, cache_lib.signature_of(avals),
             mesh_desc=str(self.mesh.shape) if self.mesh else "local",
-            placement_desc=repr(sorted(placement.assignment.items())))
+            placement_desc=repr(sorted(placement.assignment.items())),
+            extra=graph.fingerprint() + repr(sorted((jit_kwargs or {}).items())))
 
         def build() -> Callable[..., Any]:
             if self.mesh is not None:
                 return interp.wrap_sharded(acc, graph, self.mesh)
-            return jax.jit(acc.fn)
+            if aot:
+                return cache_lib.aot_compile(acc.fn, avals)
+            return jax.jit(acc.fn, **(jit_kwargs or {}))
 
         fn = self.cache.get_or_compile(key, build)
         return dataclasses.replace(acc, fn=fn)
+
+    # -- explicit PR-region management ----------------------------------------
+    def evict(self, target: "Graph | str") -> int:
+        """Free all cached bitstreams of one accelerator (by graph or name).
+
+        The analogue of releasing an accelerator's PR regions; returns the
+        number of cache entries removed.
+        """
+        name = target.name if isinstance(target, Graph) else str(target)
+        return self.cache.evict_prefix(f"{name}:")
+
+    def reconfigure(self, *, policy: PlacementPolicy | None = None,
+                    large_fraction: float | None = None) -> dict[str, Any]:
+        """Full-fabric reconfiguration: drop every placement and bitstream
+        (optionally switching placement policy / tile mix), so the next
+        assembly re-places and re-downloads from scratch."""
+        if policy is not None:
+            self.policy = policy
+        if large_fraction is not None:
+            self.grid = TileGrid(self.grid.rows, self.grid.cols, large_fraction)
+        self.cache.evict_prefix("")
+        self._last_placement = None
+        self.stats.reconfigurations += 1
+        return self.describe()
 
     # -- introspection ----------------------------------------------------------
     def describe(self) -> dict[str, Any]:
@@ -109,6 +321,44 @@ class Overlay:
             "large_tiles": len(self.grid.large_coords()),
             "policy": self.policy.value,
             "cache": dataclasses.asdict(self.cache.stats),
+            "cached_bitstreams": len(self.cache),
             "assemblies": self.stats.assemblies,
             "reconfigurations": self.stats.reconfigurations,
+            "traces": self.stats.traces,
+            "trace_seconds": self.stats.trace_seconds,
         }
+
+
+# -----------------------------------------------------------------------------
+# Module-level frontend against a process-wide default fabric
+# -----------------------------------------------------------------------------
+_DEFAULT_OVERLAY: Overlay | None = None
+
+
+def default_overlay() -> Overlay:
+    """The process-wide 3×3 dynamic overlay behind ``jit_assemble``."""
+    global _DEFAULT_OVERLAY
+    if _DEFAULT_OVERLAY is None:
+        _DEFAULT_OVERLAY = Overlay()
+    return _DEFAULT_OVERLAY
+
+
+def jit(fn: Callable[..., Any] | None = None, *,
+        overlay: Overlay | None = None, **kwargs) -> Callable[..., Any]:
+    """``overlay.jit`` against ``overlay`` or the process default fabric."""
+    ov = overlay if overlay is not None else default_overlay()
+    if fn is None:
+        return lambda f: ov.jit(f, **kwargs)
+    return ov.jit(fn, **kwargs)
+
+
+def jit_assemble(fn: Callable[..., Any] | None = None, **kwargs):
+    """Decorator form of the trace frontend::
+
+        @jit_assemble
+        def dot(a, b): return jnp.sum(a * b)
+
+        @jit_assemble(strict=True, overlay=my_overlay)
+        def f(x): ...
+    """
+    return jit(fn, **kwargs)

@@ -45,6 +45,9 @@ class Operator:
       tile_class: LARGE or SMALL (heterogeneous tile sizing, paper C5).
       flops_per_elem: rough per-element FLOP cost, used by the placement cost
         model (the paper sizes tiles by DSP count; we size by FLOPs).
+      signature: optional disambiguator for operators whose behaviour is not
+        fully captured by ``name`` (e.g. XLA-residue ops parameterized by
+        jaxpr equation params) — feeds :meth:`Graph.fingerprint`.
     """
 
     name: str
@@ -52,6 +55,7 @@ class Operator:
     fn: Callable[..., Any]
     tile_class: TileClass = TileClass.SMALL
     flops_per_elem: float = 1.0
+    signature: str = ""
 
     def __call__(self, *args):
         if len(args) != self.arity:
@@ -119,6 +123,15 @@ COS = _reg("cos", 1, jnp.cos, TileClass.LARGE, flops=8.0)
 LOG = _reg("log", 1, jnp.log, TileClass.LARGE, flops=8.0)
 EXP = _reg("exp", 1, jnp.exp, TileClass.LARGE, flops=8.0)
 RSQRT = _reg("rsqrt", 1, jax.lax.rsqrt, TileClass.LARGE, flops=4.0)
+TANH = _reg("tanh", 1, jnp.tanh, TileClass.LARGE, flops=8.0)
+
+# --- comparison operators (predicates feeding speculative branches, C4) ------
+GT = _reg("gt", 2, jnp.greater)
+LT = _reg("lt", 2, jnp.less)
+GE = _reg("ge", 2, jnp.greater_equal)
+LE = _reg("le", 2, jnp.less_equal)
+EQ = _reg("eq", 2, jnp.equal)
+NE = _reg("ne", 2, jnp.not_equal)
 
 
 # --- structured patterns ------------------------------------------------------
@@ -238,6 +251,185 @@ def make_stencil(weights: Sequence[float]) -> Operator:
         tile_class=TileClass.LARGE,
         flops_per_elem=2.0 * len(weights),
     )
+
+
+# -----------------------------------------------------------------------------
+# Primitive -> Operator lowering registry (the trace frontend's dispatch table)
+# -----------------------------------------------------------------------------
+# ``trace.py`` captures plain JAX functions as jaxprs and consults this table
+# to turn each jaxpr primitive into a library Operator — the "symbolic link"
+# resolution step.  A table entry is a *lowering rule*::
+#
+#     rule(in_avals, params) -> Operator | None
+#
+# where ``in_avals`` are the equation's abstract inputs and ``params`` the
+# jaxpr equation params.  Returning ``None`` declines the equation (it falls
+# back to fused-XLA residue, or errors under ``strict=True``).  Pluggability
+# is the point: ``kernels/`` self-registers its Pallas-backed LARGE operators
+# via :func:`register_call`, and downstream code can claim new primitives with
+# :func:`register_op` without touching the tracer.
+
+LoweringRule = Callable[..., "Operator | None"]
+
+_PRIMITIVE_TABLE: dict[str, LoweringRule] = {}
+_CALL_TABLE: dict[str, Operator] = {}
+
+
+def register_op(primitive: str, op: "Operator | LoweringRule | None" = None,
+                *, override: bool = False):
+    """Register a lowering for a jaxpr primitive name.
+
+    Three forms::
+
+        register_op("sqrt", SQRT)                 # fixed Operator
+        register_op("foo", my_rule)               # rule callable
+        @register_op("reduce_sum")                # decorator over a rule
+        def _rule(in_avals, params): ...
+    """
+    def _install(rule: LoweringRule) -> LoweringRule:
+        if not override and primitive in _PRIMITIVE_TABLE:
+            raise ValueError(f"primitive {primitive!r} already registered; "
+                             f"pass override=True to replace")
+        _PRIMITIVE_TABLE[primitive] = rule
+        return rule
+
+    if op is None:
+        return _install
+    if isinstance(op, Operator):
+        _install(lambda in_avals, params, _op=op: _op)
+        return op
+    return _install(op)
+
+
+def unregister_op(primitive: str) -> None:
+    _PRIMITIVE_TABLE.pop(primitive, None)
+
+
+def lookup_primitive(primitive: str) -> LoweringRule | None:
+    return _PRIMITIVE_TABLE.get(primitive)
+
+
+def registered_primitives() -> list[str]:
+    return sorted(_PRIMITIVE_TABLE)
+
+
+def register_call(name: str, op: Operator, *, override: bool = False) -> Operator:
+    """Map a named jitted call site (pjit ``name=``) to one opaque Operator.
+
+    This is how ``kernels/`` exposes Pallas kernels to the tracer: a traced
+    call to e.g. ``kernels.ops.vmul_reduce`` appears as ``pjit[name=
+    vmul_reduce]`` and becomes a single LARGE node — the pre-synthesized
+    bitstream — instead of being decomposed into scalar primitives.
+    """
+    if not override and name in _CALL_TABLE:
+        raise ValueError(f"call {name!r} already registered")
+    _CALL_TABLE[name] = op
+    return op
+
+
+def lookup_call(name: str) -> Operator | None:
+    return _CALL_TABLE.get(name)
+
+
+def registered_calls() -> list[str]:
+    return sorted(_CALL_TABLE)
+
+
+# --- default primitive lowerings (paper §II operator inventory) --------------
+for _prim, _lib_op in [
+    ("add", ADD), ("sub", SUB), ("mul", MUL), ("div", DIV),
+    ("max", MAX), ("min", MIN), ("neg", NEG), ("abs", ABS),
+    ("sqrt", SQRT), ("sin", SIN), ("cos", COS), ("log", LOG),
+    ("exp", EXP), ("rsqrt", RSQRT), ("tanh", TANH), ("logistic", SIGMOID),
+    ("gt", GT), ("lt", LT), ("ge", GE), ("le", LE), ("eq", EQ), ("ne", NE),
+]:
+    register_op(_prim, _lib_op)
+del _prim, _lib_op
+
+
+def _normalize_axes(axes: Sequence[int], aval) -> "int | tuple[int, ...] | None":
+    """Full-rank reductions normalize to axis=None so traced graphs carry the
+    same operator names as hand-built ones (``reduce[add,axis=None]``)."""
+    axes = tuple(axes)
+    if len(axes) == getattr(aval, "ndim", len(axes)):
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _make_reduce_rule(monoid: Operator) -> LoweringRule:
+    def rule(in_avals, params, _m=monoid):
+        return make_reduce(_m, axis=_normalize_axes(params["axes"], in_avals[0]))
+    return rule
+
+
+register_op("reduce_sum", _make_reduce_rule(ADD))
+register_op("reduce_prod", _make_reduce_rule(MUL))
+register_op("reduce_max", _make_reduce_rule(MAX))
+register_op("reduce_min", _make_reduce_rule(MIN))
+
+
+@register_op("integer_pow")
+def _lower_integer_pow(in_avals, params):
+    y = params["y"]
+    return Operator(f"pow[{y}]", 1,
+                    lambda x, _y=y: jax.lax.integer_pow(x, _y),
+                    TileClass.SMALL, flops_per_elem=float(abs(y)))
+
+
+@register_op("dot_general")
+def _lower_dot_general(in_avals, params):
+    plain = params["dimension_numbers"] == (((1,), (0,)), ((), ()))
+    # the library matmul accumulates/returns float32; map only equations whose
+    # dtype contract that preserves — everything else stays XLA residue
+    f32 = all(getattr(a, "dtype", None) == jnp.float32 for a in in_avals)
+    pet = params.get("preferred_element_type")
+    if (plain and f32 and pet in (None, jnp.float32, jnp.dtype("float32"))
+            and all(getattr(a, "ndim", 0) == 2 for a in in_avals)):
+        return LIBRARY["matmul"]
+    return None  # batched / mixed-dtype / contracted forms stay XLA residue
+
+
+@register_op("convert_element_type")
+def _lower_convert(in_avals, params):
+    dt = params["new_dtype"]
+    return Operator(f"cast[{jnp.dtype(dt).name}]", 1,
+                    lambda x, _d=dt: jax.lax.convert_element_type(x, _d),
+                    TileClass.SMALL, flops_per_elem=0.0)
+
+
+@register_op("broadcast_in_dim")
+def _lower_broadcast(in_avals, params):
+    shape, dims = params["shape"], params["broadcast_dimensions"]
+    return Operator(f"bcast{tuple(shape)}", 1,
+                    lambda x, _s=shape, _d=dims:
+                    jax.lax.broadcast_in_dim(x, _s, _d),
+                    TileClass.SMALL, flops_per_elem=0.0,
+                    signature=f"dims={tuple(dims)}")
+
+
+@register_op("reshape")
+def _lower_reshape(in_avals, params):
+    sizes, dims = params["new_sizes"], params["dimensions"]
+    return Operator(f"reshape{tuple(sizes)}", 1,
+                    lambda x, _s=sizes, _d=dims: jax.lax.reshape(x, _s, _d),
+                    TileClass.SMALL, flops_per_elem=0.0,
+                    signature=f"dims={None if dims is None else tuple(dims)}")
+
+
+@register_op("transpose")
+def _lower_transpose(in_avals, params):
+    perm = params["permutation"]
+    return Operator(f"transpose{tuple(perm)}", 1,
+                    lambda x, _p=perm: jax.lax.transpose(x, _p),
+                    TileClass.SMALL, flops_per_elem=0.0)
+
+
+@register_op("squeeze")
+def _lower_squeeze(in_avals, params):
+    dims = params["dimensions"]
+    return Operator(f"squeeze{tuple(dims)}", 1,
+                    lambda x, _d=dims: jax.lax.squeeze(x, _d),
+                    TileClass.SMALL, flops_per_elem=0.0)
 
 
 def register_model_operator(

@@ -11,9 +11,20 @@ oracle in ``ref.py`` and a jitted public wrapper in ``ops.py``):
   rmsnorm         — fused RMSNorm (row-blocked)
   flash_attention — blocked online-softmax attention (causal, GQA)
   ssd_scan        — Mamba-2 SSD chunk-local kernel (intra-chunk quadratic part)
+
+Importing ``repro.kernels.ops`` (or calling :func:`register_overlay_bitstreams`)
+self-registers these kernels in the overlay's trace frontend
+(``patterns.register_call``): a traced user function calling e.g.
+``ops.vmul_reduce`` lowers to ONE LARGE-tile node — the pre-synthesized
+Pallas bitstream — instead of being decomposed into scalar primitives.
 """
 
 import jax
+
+
+def register_overlay_bitstreams() -> None:
+    """Idempotently register the Pallas kernels as overlay LARGE operators."""
+    from repro.kernels import ops  # noqa: F401  — import side effect registers
 
 INTERPRET = jax.default_backend() != "tpu"
 

@@ -48,6 +48,7 @@ def _rmsnorm_bwd(eps, res, g):
 _rmsnorm_cv.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
 
 
+@functools.partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x, w, eps: float = 1e-6):
     return _rmsnorm_cv(x, w, eps)
 
@@ -77,6 +78,8 @@ def _attn_bwd(causal, window, softcap, scale, res, g):
 _attn_cv.defvjp(_attn_fwd, _attn_bwd)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "softcap", "scale"))
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               softcap: float | None = None, scale: float | None = None):
     """Flash attention (Pallas) with GQA + sliding window + softcap."""
@@ -118,6 +121,7 @@ def _ssd_bwd(chunk, res, g):
 _ssd_cv.defvjp(_ssd_fwd, _ssd_bwd)
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd(x, a, b, c, *, chunk: int = 64):
     """Mamba-2 SSD (y only; use ssd_with_state for stateful decode)."""
     return _ssd_cv(x, a, b, c, chunk)
@@ -136,3 +140,27 @@ def ssd_decode_step(x, a, b, c, state):
         jnp.einsum("bhn,bhp->bhnp", b, x)
     y = jnp.einsum("bhn,bhnp->bhp", c, new)
     return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Overlay registry: expose the Pallas kernels to the trace frontend as
+# pre-synthesized LARGE-tile bitstreams.  A traced user function that calls
+# one of these wrappers lowers to a single LARGE node (named below) instead
+# of being decomposed into scalar primitives — the tracer keys on the jitted
+# call-site name, so these names must match the wrappers' ``__name__``s.
+# ---------------------------------------------------------------------------
+from repro.core.patterns import (Operator, TileClass,  # noqa: E402
+                                 register_call)
+
+register_call("vmul_reduce",
+              Operator("kernels/vmul_reduce", 2, vmul_reduce,
+                       TileClass.LARGE, flops_per_elem=2.0), override=True)
+register_call("rmsnorm",
+              Operator("kernels/rmsnorm", 2, rmsnorm,
+                       TileClass.LARGE, flops_per_elem=4.0), override=True)
+register_call("attention",
+              Operator("kernels/attention", 3, attention,
+                       TileClass.LARGE, flops_per_elem=4.0), override=True)
+register_call("ssd",
+              Operator("kernels/ssd", 4, ssd,
+                       TileClass.LARGE, flops_per_elem=6.0), override=True)

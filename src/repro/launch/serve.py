@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch phi3-mini-3.8b --smoke --requests 8 --batch 4
+
+``--overlay`` serves through the JIT-assembled accelerator path: the decode
+step is traced by the overlay frontend, placed on a 3x3 tile grid and cached
+as a bitstream (paper C1/C3) instead of being jitted directly.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.archs import smoke_config
+from repro.core import Overlay
 from repro.models import params as pm
 from repro.models.transformer import model_spec
 from repro.serving import Request, ServeEngine
@@ -29,6 +34,8 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--overlay", action="store_true",
+                    help="serve through the JIT-assembled overlay decode path")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -36,7 +43,9 @@ def main(argv=None) -> int:
         raise SystemExit("serve launcher targets decoder LMs; use examples/")
 
     params = pm.init(model_spec(cfg), jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(params, cfg, batch=args.batch, max_len=args.max_len)
+    overlay = Overlay(3, 3) if args.overlay else None
+    engine = ServeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
+                         overlay=overlay)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -51,6 +60,8 @@ def main(argv=None) -> int:
     tokens = sum(len(r.out) for r in done)
     print(f"[serve] {cfg.name}: {len(done)}/{args.requests} requests, "
           f"{tokens} tokens in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
+    if overlay is not None:
+        print(f"[serve] overlay: {overlay.describe()}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return 0

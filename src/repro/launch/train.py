@@ -27,7 +27,11 @@ from repro.optim import adamw_init, adamw_update, cosine, wsd
 from repro.runtime import FailureInjector, Supervisor, TrainLoopConfig
 
 
-def make_step(cfg, schedule):
+def make_step(cfg, schedule, *, overlay=None):
+    """The jitted train step; with ``overlay`` it is JIT-assembled instead:
+    traced by the overlay frontend, lowered onto the operator library (grad
+    and optimizer primitives stay fused XLA residue) and cached as a
+    bitstream — same numerics, same donation, paper-C1 programming model."""
     def train_step(state, batch):
         params, opt_state = state
         (loss, metrics), grads = jax.value_and_grad(
@@ -35,6 +39,10 @@ def make_step(cfg, schedule):
         lr = schedule(opt_state.step)
         params, opt_state, om = adamw_update(params, grads, opt_state, lr=lr)
         return (params, opt_state), {"loss": loss, "lr": lr, **metrics, **om}
+    if overlay is not None:
+        return overlay.jit(train_step, strict=False,
+                           name=f"{cfg.name}.train_step",
+                           donate_argnums=(0,))
     return jax.jit(train_step, donate_argnums=(0,))
 
 
@@ -54,6 +62,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject simulated node failures at these steps")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--assemble-overlay", action="store_true",
+                    help="run the train step through the overlay JIT-assembly "
+                         "frontend instead of a bare jax.jit")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -72,7 +83,11 @@ def main(argv=None) -> int:
         schedule = cosine(args.lr, warmup=max(args.steps // 20, 1),
                           total=args.steps)
 
-    step_fn = make_step(cfg, schedule)
+    overlay = None
+    if args.assemble_overlay:
+        from repro.core import Overlay
+        overlay = Overlay(3, 3)
+    step_fn = make_step(cfg, schedule, overlay=overlay)
 
     def batch_fn(step: int) -> dict:
         return make_batch(cfg, args.batch, args.seq, step=step,
@@ -102,6 +117,8 @@ def main(argv=None) -> int:
           f"({dt/max(args.steps,1)*1000:.0f} ms/step), "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}, "
           f"restarts={sup.restarts} stragglers={sup.straggler_steps}")
+    if overlay is not None:
+        print(f"[train] overlay: {overlay.describe()}")
     return 0
 
 

@@ -7,6 +7,12 @@ TPU-efficient shape).  Requests are admitted into free slots, prefilled
 one-at-a-time into their slot's cache stripe, then decoded jointly; finished
 slots are recycled (continuous batching).  Greedy sampling (argmax) keeps
 the engine deterministic for tests; a temperature hook is provided.
+
+Passing ``overlay=`` routes the shared decode step through the JIT-assembly
+frontend instead of a bare ``jax.jit``: the step is traced, lowered onto the
+operator library (unmapped primitives stay fused XLA residue), placed on the
+tile grid and held in the overlay's bitstream cache — the paper's
+assembled-accelerator serving path.
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.overlay import Overlay
 from repro.models import model as mdl
 
 
@@ -33,17 +40,22 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params: Any, cfg: ArchConfig, *, batch: int,
-                 max_len: int):
+                 max_len: int, overlay: Overlay | None = None):
         self.params = params
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
+        self.overlay = overlay
         self.caches = mdl.init_cache(cfg, batch, max_len)
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = jnp.zeros((batch,), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
-        self._decode = jax.jit(
-            lambda p, t, c: mdl.decode_step(p, cfg, t, c))
+        step = lambda p, t, c: mdl.decode_step(p, cfg, t, c)
+        if overlay is not None:
+            self._decode = overlay.jit(step, strict=False,
+                                       name=f"{cfg.name}.decode")
+        else:
+            self._decode = jax.jit(step)
         self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
 
     # -- admission -----------------------------------------------------------

@@ -149,6 +149,51 @@ def test_cache_hit_on_reassembly():
     assert ov.cache.stats.hits == 1
 
 
+def test_reconfigurations_increment_on_placement_change():
+    ov = Overlay(3, 3)
+    ov.assemble(vmul_reduce_graph(128))
+    assert ov.stats.reconfigurations == 0      # first placement: nothing prior
+    ov.assemble(saxpy_graph(128))              # different graph -> new layout
+    assert ov.stats.reconfigurations == 1
+    ov.assemble(saxpy_graph(128))              # same layout -> no reconfig
+    assert ov.stats.reconfigurations == 1
+
+
+def test_describe_reports_cache_and_reconfigurations():
+    ov = Overlay(3, 3)
+    g = vmul_reduce_graph(128)
+    ov.assemble(g)
+    ov.assemble(g)
+    d = ov.describe()
+    assert d["assemblies"] == 2
+    assert d["cache"]["hits"] == 1 and d["cache"]["misses"] == 1
+    assert d["cached_bitstreams"] == 1
+    assert d["reconfigurations"] == 0
+
+
+def test_evict_frees_one_accelerators_bitstreams():
+    ov = Overlay(3, 3)
+    ov.assemble(vmul_reduce_graph(128))
+    ov.assemble(saxpy_graph(128))
+    assert len(ov.cache) == 2
+    assert ov.evict("vmul_reduce") == 1
+    assert len(ov.cache) == 1
+    ov.assemble(vmul_reduce_graph(128))        # must re-download
+    assert ov.cache.stats.misses == 3
+
+
+def test_reconfigure_flushes_fabric_and_counts():
+    ov = Overlay(3, 3)
+    g = vmul_reduce_graph(128)
+    ov.assemble(g)
+    ov.reconfigure(policy=PlacementPolicy.STATIC)
+    assert len(ov.cache) == 0
+    assert ov.stats.reconfigurations == 1
+    assert ov.policy is PlacementPolicy.STATIC
+    acc = ov.assemble(g)
+    assert acc.placement.policy is PlacementPolicy.STATIC
+
+
 def test_cache_distinguishes_shapes():
     ov = Overlay(3, 3)
     ov.assemble(vmul_reduce_graph(128))

@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Graph, Overlay, PlacementPolicy, TileGrid, assemble,

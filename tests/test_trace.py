@@ -1,0 +1,265 @@
+"""Trace frontend tests: primitive lowering, speculation, strict mode, AOT.
+
+Covers the acceptance criteria of the trace-based API:
+  * primitive -> operator lowering against patterns' registry,
+  * select_n -> speculative-branch mapping (SPEC_BEGIN/SELECT/SPEC_COMMIT),
+  * strict-mode errors on unmapped primitives (and residue fallback),
+  * AOT bitstream-cache population,
+  * traced quickstart == hand-built Graph (numerics, placement, ISA mix).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Graph, Opcode, Overlay, TileClass, TraceError,
+                        jit_assemble, trace_to_graph)
+from repro.core import patterns
+from repro.core.patterns import Operator
+from repro.core.trace import RESIDUE_PREFIX
+
+
+# ---------------------------------------------------------------------------
+# primitive -> operator lowering
+# ---------------------------------------------------------------------------
+def test_basic_primitives_lower_to_library_operators():
+    def f(a, b):
+        return jnp.sqrt(a * b + a)
+
+    sds = jax.ShapeDtypeStruct((64,), jnp.float32)
+    lowered = trace_to_graph(f, sds, sds)
+    names = [n.op.name for n in lowered.graph.op_nodes()]
+    assert names == ["mul", "add", "sqrtf"]
+    assert lowered.unmapped == ()
+    classes = [n.op.tile_class for n in lowered.graph.op_nodes()]
+    assert classes == [TileClass.SMALL, TileClass.SMALL, TileClass.LARGE]
+
+
+def test_reduce_sum_full_rank_normalizes_to_axis_none():
+    lowered = trace_to_graph(lambda x: jnp.sum(x),
+                             jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    names = [n.op.name for n in lowered.graph.op_nodes()]
+    assert names == ["reduce[add,axis=None]"]
+
+
+def test_partial_reduce_keeps_axis():
+    lowered = trace_to_graph(lambda x: jnp.sum(x, axis=0),
+                             jax.ShapeDtypeStruct((8, 4), jnp.float32))
+    names = [n.op.name for n in lowered.graph.op_nodes()]
+    assert names == ["reduce[add,axis=0]"]
+
+
+def test_dot_general_plain_matmul_maps_to_matmul_operator():
+    lowered = trace_to_graph(lambda a, b: a @ b,
+                             jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                             jax.ShapeDtypeStruct((8, 3), jnp.float32))
+    names = [n.op.name for n in lowered.graph.op_nodes()]
+    assert names == ["matmul"]
+
+
+def test_literals_become_const_nodes():
+    lowered = trace_to_graph(lambda x: x * 3.0,
+                             jax.ShapeDtypeStruct((8,), jnp.float32))
+    kinds = [n.kind for n in lowered.graph.nodes]
+    assert kinds.count("const") == 1
+
+
+def test_traced_graph_evaluates_like_fn():
+    def f(a, b):
+        return jnp.exp(-jnp.abs(a - b)).sum()
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    lowered = trace_to_graph(f, a, b)
+    np.testing.assert_allclose(lowered.graph.evaluate(a, b), f(a, b),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# select_n -> speculative branch (C4)
+# ---------------------------------------------------------------------------
+def test_select_n_maps_to_speculative_select():
+    def branchy(x):
+        return jnp.where(jnp.sum(x) > 0, jnp.sqrt(jnp.abs(x)), jnp.sin(x))
+
+    x = jnp.ones((64,)) * 2.0
+    lowered = trace_to_graph(branchy, x)
+    assert any(n.kind == "select" for n in lowered.graph.nodes)
+    assert lowered.unmapped == ()   # where/select_n fully mapped
+
+    ov = Overlay(3, 3)
+    acc = ov.assemble(lowered.graph)
+    opcodes = [ins.opcode for ins in acc.program.instructions]
+    assert Opcode.SPEC_BEGIN in opcodes
+    assert Opcode.SELECT in opcodes
+    assert Opcode.SPEC_COMMIT in opcodes
+    np.testing.assert_allclose(acc(x), jnp.sqrt(x), rtol=1e-6)
+    np.testing.assert_allclose(acc(-x), jnp.sin(-x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# strict mode vs residue fallback
+# ---------------------------------------------------------------------------
+def test_strict_mode_raises_on_unmapped_primitive():
+    x = jax.ShapeDtypeStruct((16,), jnp.float32)
+    with pytest.raises(TraceError, match="sort"):
+        trace_to_graph(lambda v: jnp.sort(v), x, strict=True)
+
+
+def test_nonstrict_leaves_residue_and_stays_correct():
+    def f(v):
+        return jnp.sort(v)[-1] + v.sum()
+
+    v = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    lowered = trace_to_graph(f, v)
+    assert "sort" in lowered.unmapped
+    residue = [n.op.name for n in lowered.graph.op_nodes()
+               if n.op is not None and n.op.name.startswith(RESIDUE_PREFIX)]
+    assert residue
+    np.testing.assert_allclose(lowered.graph.evaluate(v), f(v), rtol=1e-6)
+
+
+def test_multi_result_residue_scan_projects_each_output():
+    def f(x):
+        def body(c, xi):
+            return c + xi, c * xi
+        c, ys = jax.lax.scan(body, jnp.zeros(()), x)
+        return c + jnp.sum(ys)
+
+    x = jnp.linspace(0.0, 1.0, 16)
+    ov = Overlay(3, 3)
+    jitted = ov.jit(f)
+    np.testing.assert_allclose(jitted(x), f(x), rtol=1e-6)
+    names = [n.op.name for n in jitted.lower(x).graph.op_nodes()]
+    assert "proj[0]" in names and "proj[1]" in names
+
+
+def test_register_op_extends_the_frontend():
+    # claim an otherwise-residue primitive, then restore the table
+    assert patterns.lookup_primitive("cumsum") is None
+    op = Operator("cumsum", 1, jnp.cumsum, TileClass.LARGE)
+    patterns.register_op("cumsum", op)
+    try:
+        lowered = trace_to_graph(lambda v: jnp.cumsum(v),
+                                 jax.ShapeDtypeStruct((16,), jnp.float32),
+                                 strict=True)   # strict now succeeds
+        assert [n.op.name for n in lowered.graph.op_nodes()] == ["cumsum"]
+    finally:
+        patterns.unregister_op("cumsum")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels as registered bitstream calls
+# ---------------------------------------------------------------------------
+def test_registered_kernel_call_lowers_to_one_large_node():
+    from repro.kernels import ops as kops
+
+    a = jnp.ones((256,))
+    b = jnp.full((256,), 3.0)
+    lowered = trace_to_graph(lambda a, b: kops.vmul_reduce(a, b) * 2.0, a, b)
+    names = [n.op.name for n in lowered.graph.op_nodes()]
+    assert names == ["kernels/vmul_reduce", "mul"]
+    assert lowered.graph.op_nodes()[0].op.tile_class is TileClass.LARGE
+    ov = Overlay(3, 3)
+    acc = ov.assemble(lowered.graph)
+    np.testing.assert_allclose(acc(a, b), 1536.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Overlay.jit / aot / pytrees
+# ---------------------------------------------------------------------------
+def test_overlay_jit_pytree_in_out():
+    ov = Overlay(3, 3)
+
+    def f(d):
+        return {"s": d["a"] + d["b"], "p": d["a"] * d["b"]}
+
+    d = {"a": jnp.ones((8,)), "b": jnp.full((8,), 2.0)}
+    out = ov.jit(f)(d)
+    np.testing.assert_allclose(out["s"], 3.0)
+    np.testing.assert_allclose(out["p"], 2.0)
+
+
+def test_overlay_jit_static_args_key_separately():
+    ov = Overlay(3, 3)
+
+    def scale(x, k):
+        return x * k
+
+    jitted = ov.jit(scale, static_argnums=(1,))
+    np.testing.assert_allclose(jitted(jnp.ones((4,)), 2.0), 2.0)
+    np.testing.assert_allclose(jitted(jnp.ones((4,)), 5.0), 5.0)
+    assert ov.cache.stats.misses == 2   # two distinct bitstreams
+
+
+def test_aot_populates_bitstream_cache():
+    ov = Overlay(3, 3)
+
+    def dot(a, b):
+        return jnp.sum(a * b)
+
+    sds = jax.ShapeDtypeStruct((128,), jnp.float32)
+    ov.aot(dot, sds, sds)
+    assert ov.cache.stats.misses == 1
+    assert ov.cache.stats.compile_seconds > 0   # compile paid up front
+
+    served = ov.jit(dot)                        # fresh serve-time entry point
+    a = jnp.ones((128,))
+    np.testing.assert_allclose(served(a, a), 128.0)
+    assert ov.cache.stats.hits == 1             # assembly was a pure hit
+    assert ov.cache.stats.misses == 1
+
+
+def test_jit_assemble_decorator():
+    ov = Overlay(3, 3)
+
+    @jit_assemble(overlay=ov)
+    def saxpy(a, x, y):
+        return a * x + y
+
+    x = jnp.ones((16,))
+    np.testing.assert_allclose(saxpy(jnp.float32(2.0), x, x), 3.0)
+    assert ov.stats.traces == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance: traced quickstart == hand-built Graph path
+# ---------------------------------------------------------------------------
+def test_traced_rms_matches_manual_graph_exactly():
+    n = 1024
+
+    def rms_energy(x, window):
+        filtered = x * window
+        squared = filtered * filtered
+        total = jnp.sum(squared)
+        mean = total * jnp.float32(1.0 / n)
+        return jnp.sqrt(mean)
+
+    g = Graph("rms_energy")
+    x = g.input("x", (n,))
+    w = g.input("window", (n,))
+    filtered = g.apply(patterns.make_zip_with(patterns.MUL), x, w, name="VMUL")
+    squared = g.apply(patterns.make_zip_with(patterns.MUL), filtered,
+                      filtered, name="square")
+    total = g.apply(patterns.make_reduce(patterns.ADD), squared, name="Reduce")
+    mean = g.apply(patterns.MUL, total, g.const(jnp.float32(1.0 / n)),
+                   name="scale")
+    g.output(g.apply(patterns.SQRT, mean, name="sqrtf"))
+
+    ov = Overlay(3, 3)
+    jitted = ov.jit(rms_energy)
+    sig = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    win = jnp.hanning(n).astype(jnp.float32)
+
+    out_traced = jitted(sig, win)
+    acc_traced = jitted.accelerator(sig, win)
+    acc_manual = ov.assemble(g)
+    out_manual = acc_manual(sig, win)
+
+    # numerically identical, identical placement, identical ISA mix
+    np.testing.assert_array_equal(np.asarray(out_traced),
+                                  np.asarray(out_manual))
+    assert acc_traced.placement.assignment == acc_manual.placement.assignment
+    assert acc_traced.instruction_mix == acc_manual.instruction_mix
+    assert len(acc_traced.program) == len(acc_manual.program)
