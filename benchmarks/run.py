@@ -8,9 +8,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (branch_speculation, fig3_vmul_reduce, isa_mix,
-                            pr_overhead, tile_granularity)
+                            pr_overhead, residency_churn, tile_granularity)
     modules = [fig3_vmul_reduce, pr_overhead, isa_mix, tile_granularity,
-               branch_speculation]
+               branch_speculation, residency_churn]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

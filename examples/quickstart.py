@@ -70,17 +70,23 @@ def main():
     print(f"result       : {float(out):.6f} (reference {float(ref):.6f})")
 
     # 2. the low-level IR produces the identical accelerator ---------------
+    # (on its own fabric: assembling onto `overlay` would CO-RESIDE with the
+    # traced accelerator and pack around its tiles — see DESIGN.md §4)
     g = manual_graph()
-    acc_manual = overlay.assemble(g)
+    acc_manual = Overlay(3, 3).assemble(g)
     same = (acc_manual.placement.assignment == acc.placement.assignment
             and acc_manual.instruction_mix == acc.instruction_mix
             and float(acc_manual(sig, win)) == float(out))
     print(f"manual Graph : identical placement/ISA/numerics = {same}")
 
-    # 3. re-running is a bitstream-cache hit (paper C3: configure once) ----
-    rms(sig, win)
-    overlay.assemble(g)
-    print(f"cache        : {overlay.describe()['cache']}")
+    # 3. re-running is free (paper C3: configure once) ---------------------
+    rms(sig, win)                            # resident dispatch, no re-place
+    overlay.assemble(g)                      # second tenant on the fabric
+    overlay.assemble(g)                      # re-assembly: pure bitstream hit
+    d = overlay.describe()
+    print(f"cache        : {d['cache']}")
+    print(f"fabric       : {d['fabric']['tiles_used']}/{d['fabric']['tiles']} "
+          f"tiles over {len(d['fabric']['residents'])} co-resident accelerators")
 
     # 4. AOT: populate the cache before traffic arrives --------------------
     aot_overlay = Overlay(3, 3)

@@ -1,10 +1,15 @@
-"""Batched serving example: continuous slot recycling through the engine.
+"""Batched serving example: continuous slot recycling on a shared fabric.
 
-Runs a reduced phi3-family model, submits a wave of requests longer than the
-slot pool, and streams them through prefill + batched decode.  The shared
-decode step runs on the JIT-assembled accelerator path: ``overlay.jit``
-traces it, lowers it onto the operator library and holds the compiled step
-in the bitstream cache (every decode tick is a cache hit after the first).
+Part 1 runs a reduced phi3-family model through the engine: prefill and
+decode are TWO separate accelerators resident on one overlay — ``overlay.jit``
+traces each, places them in disjoint tiles under a footprint budget, and
+holds the compiled steps in the bitstream cache.  Every tick after the
+first dispatches straight to the resident accelerator: no re-trace, no
+re-place, not even a cache walk (residency short-circuits above the cache).
+
+Part 2 shares ONE fabric between TWO models: both engines' prefill/decode
+accelerators co-reside, and the fabric report shows per-resident tile
+occupancy — the paper's multi-accelerator PR-region picture.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -21,7 +26,7 @@ from repro.models.transformer import model_spec
 from repro.serving import Request, ServeEngine
 
 
-def main():
+def run_single_model():
     cfg = smoke_config("phi3-mini-3.8b")
     params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
     overlay = Overlay(3, 3)
@@ -42,9 +47,51 @@ def main():
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: first-8 {r.out[:8]}")
     d = overlay.describe()
-    print(f"[serve] overlay decode path: trace {d['trace_seconds']*1e3:.0f} ms "
-          f"once, cache {d['cache']}")
+    fab = d["fabric"]
+    print(f"[serve] prefill+decode co-resident: "
+          f"{[v['name'] for v in fab['residents'].values()]} "
+          f"({fab['tiles_used']}/{fab['tiles']} tiles)")
+    print(f"[serve] overlay: trace {d['trace_seconds']*1e3:.0f} ms once, "
+          f"downloads {d['downloads']}, reclaims {d['reclaims']}, "
+          f"cache {d['cache']}")
     assert len(done) == n_requests
+    assert len(fab["residents"]) >= 2          # prefill + decode
+
+
+def run_multi_model_shared_fabric():
+    """Two models served off ONE overlay: four accelerators, one fabric."""
+    overlay = Overlay(3, 3)
+    engines = {}
+    for seed, arch in enumerate(("phi3-mini-3.8b", "minicpm-2b")):
+        cfg = smoke_config(arch)
+        params = pm.init(model_spec(cfg), jax.random.PRNGKey(seed))
+        engines[arch] = ServeEngine(params, cfg, batch=2, max_len=48,
+                                    overlay=overlay)
+        for rid in range(3):
+            engines[arch].submit(
+                Request(rid=rid, prompt=[1, 2, 3, 4, 5], max_new_tokens=8))
+
+    done = {arch: [] for arch in engines}
+    for _ in range(200):                        # interleave the two engines
+        for arch, eng in engines.items():
+            done[arch].extend(eng.step())
+        if all(len(d) == 3 for d in done.values()):
+            break
+
+    fab = overlay.describe()["fabric"]
+    print(f"[serve-multi] {sum(map(len, done.values()))} requests from "
+          f"{len(engines)} models on one {fab['tiles']}-tile fabric:")
+    for rid, info in fab["residents"].items():
+        print(f"  {info['name']:>24s}  tiles {info['tiles']}")
+    print(f"[serve-multi] utilization {fab['utilization']:.0%}, "
+          f"fragmentation {fab['fragmentation']:.0%}, "
+          f"reclaims {overlay.stats.reclaims}")
+    assert all(len(d) == 3 for d in done.values())
+
+
+def main():
+    run_single_model()
+    run_multi_model_shared_fabric()
 
 
 if __name__ == "__main__":

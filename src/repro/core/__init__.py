@@ -11,9 +11,11 @@ Public API (frontend first — the paper's programming model):
   isa.compile_graph / Program / Opcode        — 42-instruction controller ISA
   interpreter.run_program / assemble          — eager ISA + JIT assembly
   cache.BitstreamCache                        — compiled-artifact (PR) cache
+  fabric.Fabric / ResidentAccelerator         — shared-fabric tile residency
 """
 
 from repro.core.cache import BitstreamCache, aot_compile, cache_key, signature_of
+from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
 from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_graph
 from repro.core.interpreter import (AssembledAccelerator, assemble,
                                     assemble_sharded, run_program, wrap_sharded)
@@ -27,9 +29,11 @@ from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
 from repro.core.trace import Lowered, TraceError, trace_to_graph
 
 __all__ = [
-    "AssembledAccelerator", "BitstreamCache", "Graph", "Instruction",
+    "AssembledAccelerator", "BitstreamCache", "Fabric", "FabricError",
+    "Graph", "Instruction",
     "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
-    "Placement", "PlacementError", "PlacementPolicy", "Program", "TileClass",
+    "Placement", "PlacementError", "PlacementPolicy", "Program",
+    "ResidentAccelerator", "TileClass",
     "TileGrid", "TraceError", "aot_compile", "assemble", "assemble_sharded",
     "branchy_graph", "cache_key", "compile_graph", "default_overlay",
     "jit_assemble", "place", "place_dynamic", "place_static", "register_call",

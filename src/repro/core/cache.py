@@ -48,6 +48,7 @@ def cache_key(name: str, signature: tuple, mesh_desc: str = "",
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    insertions: int = 0            # entries ever stored (miss-compiles + puts)
     evictions: int = 0
     compile_seconds: float = 0.0   # total "PR download" time paid
 
@@ -84,6 +85,7 @@ class BitstreamCache:
         exe = build()
         self.stats.compile_seconds += time.perf_counter() - t0
         self.stats.misses += 1
+        self.stats.insertions += 1
         self._store[key] = exe
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
@@ -91,11 +93,34 @@ class BitstreamCache:
         return exe
 
     def put(self, key: str, exe: Any) -> None:
+        if key not in self._store:
+            self.stats.insertions += 1
         self._store[key] = exe
         self._store.move_to_end(key)
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.stats.evictions += 1
+
+    def peek(self, key: str) -> Any:
+        """The stored executable for ``key`` (or None) without touching
+        LRU order or hit/miss statistics — for introspection, not dispatch."""
+        return self._store.get(key)
+
+    def keys(self) -> list[str]:
+        """Current keys, LRU order (oldest first) — the residency layer walks
+        these when coupling PR-region release with bitstream eviction."""
+        return list(self._store)
+
+    def evict_keys(self, keys: "Any") -> int:
+        """Free exactly the given bitstream keys (a resident accelerator's
+        holdings); missing keys are ignored.  Returns entries removed."""
+        removed = 0
+        for k in keys:
+            if k in self._store:
+                del self._store[k]
+                removed += 1
+        self.stats.evictions += removed
+        return removed
 
     def evict_prefix(self, prefix: str) -> int:
         """Explicitly free all bitstreams whose key starts with ``prefix``
@@ -107,8 +132,11 @@ class BitstreamCache:
         return len(doomed)
 
     def clear(self) -> None:
+        """Drop every entry.  Stats survive — like :meth:`evict_prefix`, a
+        flush is an eviction event, not amnesia (hit/miss/download history
+        stays measurable across reconfigurations)."""
+        self.stats.evictions += len(self._store)
         self._store.clear()
-        self.stats = CacheStats()
 
 
 def aot_compile(fn: Callable[..., Any], abstract_args: tuple,

@@ -128,6 +128,12 @@ class AssembledAccelerator:
     placement: Placement
     total_hops: int
     instruction_mix: dict[str, int]
+    # residency handle (set by Overlay.assemble): which Fabric resident this
+    # executable belongs to, and at which admission generation.  A stale
+    # generation means the accelerator's PR regions were reclaimed — callers
+    # (JitAssembled) re-assemble instead of running off released tiles.
+    resident_id: str | None = None
+    generation: int = -1
 
     def __call__(self, *args):
         return self.fn(*args)

@@ -43,10 +43,11 @@ from repro.core import cache as cache_lib
 from repro.core import interpreter as interp
 from repro.core import trace as trace_lib
 from repro.core.cache import BitstreamCache
+from repro.core.fabric import Fabric, ResidentAccelerator
 from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
-from repro.core.placement import (Coord, Placement, PlacementPolicy, TileGrid,
-                                  place)
+from repro.core.placement import (Coord, Placement, PlacementError,
+                                  PlacementPolicy, TileGrid, place)
 
 
 @dataclasses.dataclass
@@ -55,6 +56,10 @@ class OverlayStats:
     reconfigurations: int = 0   # placements changed between assemblies
     traces: int = 0             # frontend captures (jit/aot signatures)
     trace_seconds: float = 0.0  # total trace+lowering time (frontend cost)
+    downloads: int = 0          # accelerators placed + admitted to the fabric
+    evictions: int = 0          # residents released (explicit or reclaimed)
+    reclaims: int = 0           # LRU evictions forced by placement pressure
+    defrags: int = 0            # defragmentation passes that moved residents
 
 
 @dataclasses.dataclass
@@ -62,9 +67,9 @@ class _JitEntry:
     """One (signature, static-args) instantiation of a jitted function."""
 
     lowered: trace_lib.Lowered
-    acc: interp.AssembledAccelerator
-    trace_seconds: float      # capture + jaxpr->Graph lowering
-    assemble_seconds: float   # placement + ISA compile + cache insert
+    acc: interp.AssembledAccelerator | None   # None: traced but not assembled
+    trace_seconds: float            # capture + jaxpr->Graph lowering
+    assemble_seconds: float = 0.0   # placement + ISA compile + cache insert
 
 
 class JitAssembled:
@@ -80,7 +85,8 @@ class JitAssembled:
                  strict: bool = False, name: str | None = None,
                  fixed: dict[int, Coord] | None = None,
                  static_argnums: tuple[int, ...] = (),
-                 donate_argnums: tuple[int, ...] = ()) -> None:
+                 donate_argnums: tuple[int, ...] = (),
+                 tile_budget: int | None = None) -> None:
         self.overlay = overlay
         self.fn = fn
         self.strict = strict
@@ -88,6 +94,7 @@ class JitAssembled:
         self.fixed = fixed
         self.static_argnums = tuple(static_argnums)
         self.donate_argnums = tuple(donate_argnums)
+        self.tile_budget = tile_budget
         self._entries: dict[str, _JitEntry] = {}
         self.__name__ = self.name
         self.__doc__ = getattr(fn, "__doc__", None)
@@ -122,44 +129,54 @@ class JitAssembled:
             offset += n
         return tuple(out)
 
+    def _traced(self, key: str, closed: Callable[..., Any],
+                dyn: tuple) -> _JitEntry:
+        """The (possibly assembly-less) entry for a signature, tracing at
+        most once: ``lower()`` and ``__call__`` share the memo."""
+        entry = self._entries.get(key)
+        if entry is None:
+            t0 = time.perf_counter()
+            lowered = trace_lib.trace_to_graph(closed, *dyn, name=self.name,
+                                               strict=self.strict)
+            dt = time.perf_counter() - t0
+            self.overlay.stats.traces += 1
+            self.overlay.stats.trace_seconds += dt
+            entry = _JitEntry(lowered=lowered, acc=None, trace_seconds=dt)
+            self._entries[key] = entry
+        return entry
+
     def _entry(self, args: tuple, *, aot: bool = False,
                _presplit=None) -> _JitEntry:
         dyn, closed, static_repr = _presplit or self._split(args)
         key = repr((cache_lib.signature_of(dyn),
                     jax.tree_util.tree_structure(dyn), static_repr))
-        hit = self._entries.get(key)
-        if hit is not None:
-            return hit
-
+        entry = self._traced(key, closed, dyn)
+        acc = entry.acc
+        if acc is not None and self.overlay.resident_current(acc):
+            # hot path: still resident in the fabric — just bump recency
+            self.overlay.fabric.touch(acc.resident_id)
+            return entry
+        # first assembly for this signature, or the accelerator was evicted
+        # from the fabric since (LRU reclaim / reconfigure): re-place and
+        # re-download
         t0 = time.perf_counter()
-        lowered = trace_lib.trace_to_graph(closed, *dyn, name=self.name,
-                                           strict=self.strict)
-        t1 = time.perf_counter()
         donate = self._donate_leaf_indices(args)
         jit_kwargs = {"donate_argnums": donate} if donate else None
-        acc = self.overlay.assemble(lowered.graph, fixed=self.fixed,
-                                    jit_kwargs=jit_kwargs, aot=aot)
-        t2 = time.perf_counter()
-
-        self.overlay.stats.traces += 1
-        self.overlay.stats.trace_seconds += t1 - t0
-        entry = _JitEntry(lowered=lowered, acc=acc,
-                          trace_seconds=t1 - t0, assemble_seconds=t2 - t1)
-        self._entries[key] = entry
+        entry.acc = self.overlay.assemble(entry.lowered.graph, fixed=self.fixed,
+                                          jit_kwargs=jit_kwargs, aot=aot,
+                                          tile_budget=self.tile_budget)
+        entry.assemble_seconds = time.perf_counter() - t0
         return entry
 
     # -- public surface -------------------------------------------------------
     def lower(self, *args) -> trace_lib.Lowered:
-        """The lowered IR for this signature — reuses an already-traced
-        entry when one exists, else traces without assembling."""
+        """The lowered IR for this signature — traced at most once and
+        memoized into the entry table (a later ``__call__`` assembles the
+        already-traced graph instead of re-tracing)."""
         dyn, closed, static_repr = self._split(args)
         key = repr((cache_lib.signature_of(dyn),
                     jax.tree_util.tree_structure(dyn), static_repr))
-        hit = self._entries.get(key)
-        if hit is not None:
-            return hit.lowered
-        return trace_lib.trace_to_graph(closed, *dyn, name=self.name,
-                                        strict=self.strict)
+        return self._traced(key, closed, dyn).lowered
 
     def accelerator(self, *args) -> interp.AssembledAccelerator:
         """The assembled accelerator for this signature (traces if needed)."""
@@ -182,7 +199,13 @@ class JitAssembled:
 
 
 class Overlay:
-    """A rows×cols dynamic overlay with a bitstream cache.
+    """A rows×cols dynamic overlay with a shared fabric and bitstream cache.
+
+    All accelerators assembled through one ``Overlay`` co-reside on one
+    :class:`~repro.core.fabric.Fabric`: each assembly packs into the tiles
+    the current residents leave free, and when the fabric is full the
+    overlay reclaims least-recently-used residents (releasing their tiles
+    *and* evicting their bitstreams — the paper's PR-region replacement).
 
     Args:
       rows/cols: tile grid dimensions (paper evaluates 3×3).
@@ -191,6 +214,9 @@ class Overlay:
       mesh / tile_axis: optional JAX mesh for real-ICI assembly
         (:func:`interpreter.assemble_sharded`); otherwise local assembly.
       cache_capacity: bitstream cache slots.
+      auto_defragment: re-place surviving residents contiguously after every
+        LRU reclaim (costs their bitstreams — moved accelerators re-download
+        on next use).
     """
 
     def __init__(self, rows: int = 3, cols: int = 3, *,
@@ -198,12 +224,15 @@ class Overlay:
                  large_fraction: float = 0.25,
                  mesh: jax.sharding.Mesh | None = None,
                  tile_axis: str = "tiles",
-                 cache_capacity: int = 256) -> None:
+                 cache_capacity: int = 256,
+                 auto_defragment: bool = False) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
         self.tile_axis = tile_axis
         self.cache = BitstreamCache(cache_capacity)
+        self.fabric = Fabric(self.grid)
+        self.auto_defragment = auto_defragment
         self.stats = OverlayStats()
         self._last_placement: Placement | None = None
 
@@ -212,23 +241,29 @@ class Overlay:
             strict: bool = False, name: str | None = None,
             fixed: dict[int, Coord] | None = None,
             static_argnums: tuple[int, ...] = (),
-            donate_argnums: tuple[int, ...] = ()) -> Callable[..., Any]:
+            donate_argnums: tuple[int, ...] = (),
+            tile_budget: int | None = None) -> Callable[..., Any]:
         """Compile a plain JAX function into an overlay accelerator.
 
         Usable directly (``acc = overlay.jit(fn)``) or as a decorator, with
         or without arguments.  ``strict=True`` errors on primitives without a
         library lowering; the default leaves them as fused XLA residue.
         ``fixed`` pins graph nodes to tiles (static-placement experiments).
+        ``tile_budget`` caps this accelerator's fabric footprint so it can
+        co-reside with others (large traced graphs otherwise greedily spread
+        over every free tile).
         """
         def wrap(f: Callable[..., Any]) -> JitAssembled:
             return JitAssembled(self, f, strict=strict, name=name, fixed=fixed,
                                 static_argnums=static_argnums,
-                                donate_argnums=donate_argnums)
+                                donate_argnums=donate_argnums,
+                                tile_budget=tile_budget)
         return wrap if fn is None else wrap(fn)
 
     def aot(self, fn: Callable[..., Any], *abstract_args,
             strict: bool = False, name: str | None = None,
-            fixed: dict[int, Coord] | None = None) -> JitAssembled:
+            fixed: dict[int, Coord] | None = None,
+            tile_budget: int | None = None) -> JitAssembled:
         """Ahead-of-time assembly: populate the bitstream cache for a
         signature before traffic arrives (pay the PR download at startup).
 
@@ -236,80 +271,237 @@ class Overlay:
         arrays also work).  Returns the jitted wrapper — calling it with
         matching concrete inputs is a pure cache hit.
         """
-        jitted = self.jit(fn, strict=strict, name=name, fixed=fixed)
+        jitted = self.jit(fn, strict=strict, name=name, fixed=fixed,
+                          tile_budget=tile_budget)
         jitted._entry(abstract_args, aot=True)
         return jitted
 
     # -- assembly (low-level Graph IR path) -----------------------------------
-    def plan(self, graph: Graph,
-             fixed: dict[int, Coord] | None = None) -> tuple[Placement, Program]:
-        """Placement + ISA program, without building the executable."""
-        placement = place(graph, self.grid, self.policy, fixed)
+    def plan(self, graph: Graph, fixed: dict[int, Coord] | None = None, *,
+             occupied: "set[Coord] | None" = None,
+             tile_budget: int | None = None) -> tuple[Placement, Program]:
+        """Placement + ISA program, without building the executable.
+
+        Residency-aware: by default packs around the fabric's current
+        residents (pass ``occupied=set()`` to plan against an empty fabric).
+        Does NOT admit the placement — a plan holds no tiles.
+        """
+        occ = self.fabric.occupied() if occupied is None else occupied
+        placement = place(graph, self.grid, self.policy, fixed,
+                          occupied=occ, max_tiles=tile_budget)
         return placement, compile_graph(graph, placement)
+
+    def _resident_key(self, graph: Graph, avals: tuple,
+                      fixed: dict[int, Coord] | None) -> str:
+        # `fixed` is part of the accelerator's identity: the same graph
+        # pinned to different tiles is a different placement/bitstream
+        pins = repr(sorted(fixed.items())) if fixed else ""
+        return cache_lib.cache_key(graph.name, cache_lib.signature_of(avals),
+                                   placement_desc=pins,
+                                   extra="resident:" + graph.fingerprint())
+
+    def resident_current(self, acc: interp.AssembledAccelerator) -> bool:
+        """Whether an assembled accelerator still holds its PR regions."""
+        return self.fabric.is_current(acc.resident_id, acc.generation)
+
+    def _place_with_reclaim(self, graph: Graph,
+                            fixed: dict[int, Coord] | None,
+                            tile_budget: int | None) -> Placement:
+        """Place into free tiles; on pressure, reclaim LRU residents
+        (tiles + bitstreams via the one evict path) until the graph fits or
+        the fabric is empty.  A graph that cannot fit even an *empty*
+        fabric is structurally unplaceable: it re-raises immediately rather
+        than evicting innocent residents first."""
+        probed = False
+        while True:
+            try:
+                return place(graph, self.grid, self.policy, fixed,
+                             occupied=self.fabric.occupied(),
+                             max_tiles=tile_budget)
+            except PlacementError:
+                victim = self.fabric.lru()
+                if victim is None:
+                    raise
+                if not probed:
+                    # propagates the PlacementError when reclaiming could
+                    # never help (e.g. a LARGE op on an all-SMALL grid)
+                    place(graph, self.grid, self.policy, fixed,
+                          occupied=frozenset(), max_tiles=tile_budget)
+                    probed = True
+                self._evict_resident(victim.rid)
+                self.stats.reclaims += 1
+                if self.auto_defragment:
+                    self.defragment()
 
     def assemble(self, graph: Graph, *,
                  fixed: dict[int, Coord] | None = None,
                  jit: bool = True,
                  jit_kwargs: dict[str, Any] | None = None,
-                 aot: bool = False) -> interp.AssembledAccelerator:
-        """JIT-assemble ``graph`` into an accelerator (cached).
+                 aot: bool = False,
+                 tile_budget: int | None = None) -> interp.AssembledAccelerator:
+        """JIT-assemble ``graph`` into a fabric-resident accelerator (cached).
+
+        If the same graph+signature is already resident this is a pure hit:
+        its existing placement (and tiles) are reused and its recency is
+        bumped.  Otherwise the graph is placed into the free tiles —
+        reclaiming LRU residents under pressure — and admitted to the
+        fabric as a new resident (a "download").
 
         ``aot=True`` lowers AND compiles the executable eagerly (bitstream
         pre-population); otherwise XLA compiles lazily on first call.
+        ``tile_budget`` caps the accelerator's footprint (see :meth:`jit`).
         """
-        placement, program = self.plan(graph, fixed)
-        if self._last_placement is not None and \
-                placement.assignment != self._last_placement.assignment:
-            self.stats.reconfigurations += 1
-        self._last_placement = placement
+        graph.validate()
+        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+        rid = self._resident_key(graph, avals, fixed)
+
+        resident = self.fabric.get(rid)
+        if resident is not None:
+            self.fabric.touch(rid)
+            placement, program = resident.placement, resident.program
+            acc = resident.acc        # built once at admission; reusable
+        else:
+            placement = self._place_with_reclaim(graph, fixed, tile_budget)
+            program = compile_graph(graph, placement)
+            resident = self.fabric.admit(rid, graph.name, graph, placement,
+                                         program, tile_budget=tile_budget,
+                                         fixed=fixed)
+            self.stats.downloads += 1
+            # only a real re-place/download changes the fabric layout; a
+            # resident hit dispatches to tiles already configured
+            if self._last_placement is not None and \
+                    placement.assignment != self._last_placement.assignment:
+                self.stats.reconfigurations += 1
+            self._last_placement = placement
+            acc = None
         self.stats.assemblies += 1
 
-        if self.mesh is not None:
-            acc = interp.assemble_sharded(graph, placement, self.mesh,
-                                          self.tile_axis, program=program)
-        else:
-            acc = interp.assemble(graph, placement, program=program)
+        if acc is None:
+            if self.mesh is not None:
+                acc = interp.assemble_sharded(graph, placement, self.mesh,
+                                              self.tile_axis, program=program)
+            else:
+                acc = interp.assemble(graph, placement, program=program)
+            acc = dataclasses.replace(acc, resident_id=rid,
+                                      generation=resident.generation)
+            resident.acc = acc
 
         if not jit:
             return acc
 
-        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
         key = cache_lib.cache_key(
             graph.name, cache_lib.signature_of(avals),
             mesh_desc=str(self.mesh.shape) if self.mesh else "local",
             placement_desc=repr(sorted(placement.assignment.items())),
             extra=graph.fingerprint() + repr(sorted((jit_kwargs or {}).items())))
 
+        # the BitstreamCache's own LRU may have dropped this resident's
+        # bitstream while it stayed fabric-resident (finite store below the
+        # region count) — recompiling it now is a real re-download; keep the
+        # ledger honest instead of reporting a pure hit
+        if key in resident.cache_keys and key not in self.cache:
+            resident.cache_keys = tuple(k for k in resident.cache_keys
+                                        if k in self.cache)
+            self.stats.downloads += 1
+
+        base = acc
+
+        if aot and self.mesh is None:
+            cached = self.cache.peek(key)
+            if cached is not None and not isinstance(cached, jax.stages.Compiled):
+                # a lazily-jitted entry cannot satisfy the AOT contract
+                # ("pay the PR download at startup"): drop it so the rebuild
+                # below eagerly compiles — and is timed as download cost
+                self.cache.evict_keys([key])
+
         def build() -> Callable[..., Any]:
             if self.mesh is not None:
-                return interp.wrap_sharded(acc, graph, self.mesh)
+                return interp.wrap_sharded(base, graph, self.mesh)
             if aot:
-                return cache_lib.aot_compile(acc.fn, avals)
-            return jax.jit(acc.fn, **(jit_kwargs or {}))
+                return cache_lib.aot_compile(base.fn, avals)
+            return jax.jit(base.fn, **(jit_kwargs or {}))
 
         fn = self.cache.get_or_compile(key, build)
+        self.fabric.add_cache_key(rid, key)
         return dataclasses.replace(acc, fn=fn)
 
     # -- explicit PR-region management ----------------------------------------
-    def evict(self, target: "Graph | str") -> int:
-        """Free all cached bitstreams of one accelerator (by graph or name).
+    def _evict_resident(self, rid: str) -> int:
+        """THE evict path: release a resident's tiles and drop its
+        bitstreams in one motion.  Returns cache entries removed."""
+        resident = self.fabric.release(rid)
+        if resident is None:
+            return 0
+        self.stats.evictions += 1
+        return self.cache.evict_keys(resident.cache_keys)
 
-        The analogue of releasing an accelerator's PR regions; returns the
-        number of cache entries removed.
+    def evict(self, target: "Graph | str") -> int:
+        """Free one accelerator's PR regions AND its cached bitstreams
+        (by graph or name — all resident signatures of that name).
+
+        Returns the number of cache entries removed.
         """
         name = target.name if isinstance(target, Graph) else str(target)
-        return self.cache.evict_prefix(f"{name}:")
+        removed = 0
+        for rid in [r.rid for r in self.fabric.residents.values()
+                    if r.name == name]:
+            removed += self._evict_resident(rid)
+        # sweep bitstreams with no residency record (jit=False assemblies,
+        # pre-eviction leftovers) so evict-by-name stays exhaustive
+        removed += self.cache.evict_prefix(f"{name}:")
+        return removed
+
+    def defragment(self) -> int:
+        """Re-place surviving residents contiguously (most-recently-used
+        first) to close occupancy holes left by evictions.
+
+        Moving a resident invalidates its bitstreams (a placement routes
+        differently ⇒ different bitstream), so moved accelerators pay a
+        re-download on next use.  All-or-nothing: if any survivor fails to
+        re-place, nothing moves.  Returns the number of residents moved.
+        """
+        survivors = self.fabric.lru_order()[::-1]   # MRU packs first
+        plan: list[tuple[ResidentAccelerator, Placement]] = []
+        scratch: set[Coord] = set()
+        # pinned residents are immovable: their tiles anchor the packing
+        for res in survivors:
+            if res.fixed is not None:
+                scratch |= res.tiles
+        for res in survivors:
+            if res.fixed is not None:
+                continue
+            try:
+                pl = place(res.graph, self.grid, self.policy,
+                           occupied=scratch, max_tiles=res.tile_budget)
+            except PlacementError:
+                return 0
+            plan.append((res, pl))
+            scratch |= set(pl.assignment.values())
+        moved = 0
+        for res, pl in plan:
+            if pl.assignment == res.placement.assignment:
+                continue
+            self.cache.evict_keys(res.cache_keys)
+            self.fabric.rehome(res.rid, pl, compile_graph(res.graph, pl))
+            moved += 1
+        if moved:
+            self.stats.defrags += 1
+        return moved
 
     def reconfigure(self, *, policy: PlacementPolicy | None = None,
                     large_fraction: float | None = None) -> dict[str, Any]:
-        """Full-fabric reconfiguration: drop every placement and bitstream
-        (optionally switching placement policy / tile mix), so the next
-        assembly re-places and re-downloads from scratch."""
+        """Full-fabric reconfiguration: flush every resident accelerator
+        (tiles AND bitstreams; optionally switching placement policy / tile
+        mix), so the next assembly re-places and re-downloads from scratch.
+        Cache statistics survive the flush."""
         if policy is not None:
             self.policy = policy
         if large_fraction is not None:
             self.grid = TileGrid(self.grid.rows, self.grid.cols, large_fraction)
-        self.cache.evict_prefix("")
+        # reset() keeps the generation counter monotonic: handles assembled
+        # before the flush must not validate against post-flush re-admissions
+        self.stats.evictions += len(self.fabric.reset(self.grid))
+        self.cache.clear()                        # stats survive the flush
         self._last_placement = None
         self.stats.reconfigurations += 1
         return self.describe()
@@ -322,10 +514,15 @@ class Overlay:
             "policy": self.policy.value,
             "cache": dataclasses.asdict(self.cache.stats),
             "cached_bitstreams": len(self.cache),
+            "fabric": self.fabric.describe(),
             "assemblies": self.stats.assemblies,
             "reconfigurations": self.stats.reconfigurations,
             "traces": self.stats.traces,
             "trace_seconds": self.stats.trace_seconds,
+            "downloads": self.stats.downloads,
+            "evictions": self.stats.evictions,
+            "reclaims": self.stats.reclaims,
+            "defrags": self.stats.defrags,
         }
 
 

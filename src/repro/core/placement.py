@@ -168,14 +168,21 @@ def _edge_costs(graph: Graph, assignment: dict[int, Coord]) -> dict[tuple[int, i
 
 
 def place_static(graph: Graph, grid: TileGrid,
-                 fixed: dict[int, Coord] | None = None) -> Placement:
+                 fixed: dict[int, Coord] | None = None, *,
+                 occupied: Iterable[Coord] = (),
+                 max_tiles: int | None = None) -> Placement:
     """Static overlay placement: operators at fixed positions.
 
-    With ``fixed`` given (as in the fig-2 scenarios) it is used verbatim;
-    otherwise op-nodes are assigned round-robin in row-major grid order — the
-    'operators are wherever they happen to be' regime the paper's static
-    overlay suffers from.
+    With ``fixed`` given (as in the fig-2 scenarios) it is used verbatim —
+    but pinning onto a tile held by another resident accelerator is a
+    :class:`PlacementError` (the fabric is shared; see ``core/fabric.py``).
+    Otherwise op-nodes are assigned round-robin in row-major order over the
+    *free* tiles only — the 'operators are wherever they happen to be'
+    regime the paper's static overlay suffers from, packed incrementally
+    around whatever is already resident.  ``max_tiles`` caps the footprint
+    (the round-robin pool) so one accelerator cannot monopolize the fabric.
     """
+    occupied = set(occupied)
     ops = graph.op_nodes()
     assignment: dict[int, Coord] = {}
     if fixed is not None:
@@ -186,57 +193,100 @@ def place_static(graph: Graph, grid: TileGrid,
             if not _class_ok(node, coord, grid):
                 raise PlacementError(
                     f"node {node.name!r} (LARGE) pinned to SMALL tile {coord}")
+            if coord in occupied:
+                raise PlacementError(
+                    f"node {node.name!r} pinned to tile {coord} already held "
+                    f"by a resident accelerator ({len(occupied)} tiles occupied)")
             assignment[node.node_id] = coord
     else:
-        large_pool = itertools.cycle(grid.large_coords() or grid.coords())
-        all_pool = itertools.cycle(grid.coords())
+        free_all = [c for c in grid.coords() if c not in occupied]
+        if not free_all:
+            raise PlacementError(
+                f"no free tiles for {graph.name!r} on {grid.rows}x{grid.cols} "
+                f"grid ({len(occupied)} occupied by resident accelerators)")
+        # LARGE availability is computed over ALL free tiles: the footprint
+        # cap below is soft for class necessity (mirrors place_dynamic)
+        free_large = [c for c in free_all
+                      if grid.tile_class(c) is TileClass.LARGE]
+        window = free_all if max_tiles is None else free_all[:max(1, max_tiles)]
+        large_pool = itertools.cycle(free_large or window)
+        all_pool = itertools.cycle(window)
         for node in ops:
             cls = node.op.tile_class if node.op is not None else TileClass.SMALL
+            if cls is TileClass.LARGE and not free_large and grid.large_coords():
+                # grid has LARGE tiles but none are free: residency pressure
+                raise PlacementError(
+                    f"no free LARGE tile for {node.name!r} on "
+                    f"{grid.rows}x{grid.cols} grid "
+                    f"({len(occupied)} tiles occupied)")
             pool = large_pool if cls is TileClass.LARGE else all_pool
             assignment[node.node_id] = next(pool)
     return Placement(grid, PlacementPolicy.STATIC, assignment,
                      _edge_costs(graph, assignment))
 
 
-def place_dynamic(graph: Graph, grid: TileGrid) -> Placement:
+def place_dynamic(graph: Graph, grid: TileGrid, *,
+                  occupied: Iterable[Coord] = (),
+                  max_tiles: int | None = None) -> Placement:
     """Dynamic overlay placement (the paper's contribution, C2).
 
     Greedy contiguous packing: visit op-nodes in topological order; place each
     node on the free, class-compatible tile that minimizes summed Manhattan
     distance to its already-placed producers (ties broken row-major, so
     chains lay out as pipelines along a row — 'contiguous and pipelined').
-    Falls back to sharing a producer's tile when the grid is saturated
-    (co-located ops cost zero hops, like packing two ops in one PR region).
+    Falls back to sharing one of *this graph's own* tiles when no free tile
+    remains (co-located ops cost zero hops, like packing two ops in one PR
+    region).
+
+    Multi-tenancy (``core/fabric.py``): ``occupied`` removes tiles held by
+    resident accelerators from the free pool, so graphs pack incrementally
+    around each other; when a node finds neither a free class-compatible
+    tile nor a co-locatable own tile, placement *raises pressure*
+    (:class:`PlacementError`) instead of silently overwriting residents —
+    the overlay answers by reclaiming LRU residents.  ``max_tiles`` caps
+    this graph's footprint (further ops co-locate) so one big accelerator
+    does not monopolize the fabric; the cap is soft — it is exceeded only
+    when a class-incompatible footprint would otherwise fail (e.g. the
+    first LARGE op of a budget-exhausted graph still claims a LARGE tile).
     """
+    occupied = set(occupied)
     ops = graph.op_nodes()
-    free: list[Coord] = grid.coords()
+    free: list[Coord] = [c for c in grid.coords() if c not in occupied]
     assignment: dict[int, Coord] = {}
+    used: set[Coord] = set()
 
     for node in ops:
         producers = [assignment[i] for i in node.inputs if i in assignment]
-        candidates = [c for c in free if _class_ok(node, c, grid)]
+        cand_all = [c for c in free if _class_ok(node, c, grid)]
         cls = node.op.tile_class if node.op is not None else TileClass.SMALL
         if cls is TileClass.SMALL:
             # avoid fragmenting LARGE tiles with SMALL ops when possible (C5)
-            small_only = [c for c in candidates
+            small_only = [c for c in cand_all
                           if grid.tile_class(c) is TileClass.SMALL]
             if small_only:
-                candidates = small_only
+                cand_all = small_only
+        under_budget = max_tiles is None or len(used) < max_tiles
+        candidates = cand_all if under_budget else []
         if not candidates:
-            # saturate: co-locate on an already-occupied class-compatible tile
+            # co-locate on one of this graph's own class-compatible tiles
             # (two ops packed into one PR region); class limits still hold
-            occupied_ok = [c for c in assignment.values()
-                           if _class_ok(node, c, grid)]
-            if producers and producers[-1] in occupied_ok:
+            own_ok = [c for c in assignment.values() if _class_ok(node, c, grid)]
+            if producers and producers[-1] in own_ok:
                 assignment[node.node_id] = producers[-1]
                 continue
-            if occupied_ok:
-                assignment[node.node_id] = occupied_ok[-1]
+            if own_ok:
+                assignment[node.node_id] = own_ok[-1]
                 continue
-            raise PlacementError(
-                f"no {node.op.tile_class if node.op else 'SMALL'} tile for "
-                f"{node.name!r} on {grid.rows}x{grid.cols} grid "
-                f"(large_fraction={grid.large_fraction})")
+            if cand_all:
+                # over budget but no own tile fits this class: claim a free
+                # one anyway (soft cap) rather than fail a placeable graph
+                candidates = cand_all
+            else:
+                raise PlacementError(
+                    f"no {node.op.tile_class if node.op else 'SMALL'} tile for "
+                    f"{node.name!r} on {grid.rows}x{grid.cols} grid "
+                    f"(large_fraction={grid.large_fraction}, "
+                    f"{len(occupied)} tiles held by resident accelerators)")
         if producers:
             best = min(candidates,
                        key=lambda c: (sum(manhattan(c, p) for p in producers), c))
@@ -244,14 +294,25 @@ def place_dynamic(graph: Graph, grid: TileGrid) -> Placement:
             best = candidates[0]
         assignment[node.node_id] = best
         free.remove(best)
+        used.add(best)
 
     return Placement(grid, PlacementPolicy.DYNAMIC, assignment,
                      _edge_costs(graph, assignment))
 
 
 def place(graph: Graph, grid: TileGrid, policy: PlacementPolicy,
-          fixed: dict[int, Coord] | None = None) -> Placement:
+          fixed: dict[int, Coord] | None = None, *,
+          occupied: Iterable[Coord] = (),
+          max_tiles: int | None = None) -> Placement:
+    """Place ``graph`` into the *free* portion of ``grid``.
+
+    ``occupied`` is the set of tiles currently held by resident accelerators
+    (``Fabric.occupied()``); both policies pack incrementally around it and
+    raise :class:`PlacementError` when the graph cannot fit — the overlay's
+    cue to reclaim residents.  ``max_tiles`` bounds this graph's footprint.
+    """
     graph.validate()
     if policy is PlacementPolicy.STATIC:
-        return place_static(graph, grid, fixed)
-    return place_dynamic(graph, grid)
+        return place_static(graph, grid, fixed, occupied=occupied,
+                            max_tiles=max_tiles)
+    return place_dynamic(graph, grid, occupied=occupied, max_tiles=max_tiles)

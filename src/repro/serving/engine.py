@@ -8,11 +8,16 @@ one-at-a-time into their slot's cache stripe, then decoded jointly; finished
 slots are recycled (continuous batching).  Greedy sampling (argmax) keeps
 the engine deterministic for tests; a temperature hook is provided.
 
-Passing ``overlay=`` routes the shared decode step through the JIT-assembly
-frontend instead of a bare ``jax.jit``: the step is traced, lowered onto the
-operator library (unmapped primitives stay fused XLA residue), placed on the
-tile grid and held in the overlay's bitstream cache — the paper's
-assembled-accelerator serving path.
+Passing ``overlay=`` routes BOTH serving steps through the JIT-assembly
+frontend instead of bare ``jax.jit``: prefill and decode become two
+*separate accelerators resident on one shared fabric* — each is traced,
+lowered onto the operator library (unmapped primitives stay fused XLA
+residue), placed into its own tiles under a footprint budget
+(``tile_budget``, default a quarter of the fabric so several engines /
+prompt-length variants can co-reside), and held in the overlay's bitstream
+cache.  This is the paper's multi-accelerator fabric: decode stays hot
+(touched every tick) while cold prefill variants are the first reclaimed
+under placement pressure.
 """
 
 from __future__ import annotations
@@ -35,12 +40,14 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
+    decode_steps: int = 0     # batched decode ticks this request has taken
     done: bool = False
 
 
 class ServeEngine:
     def __init__(self, params: Any, cfg: ArchConfig, *, batch: int,
-                 max_len: int, overlay: Overlay | None = None):
+                 max_len: int, overlay: Overlay | None = None,
+                 tile_budget: int | None = None):
         self.params = params
         self.cfg = cfg
         self.batch = batch
@@ -51,11 +58,21 @@ class ServeEngine:
         self.slot_pos = jnp.zeros((batch,), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
         step = lambda p, t, c: mdl.decode_step(p, cfg, t, c)
+        pf = lambda p, toks, c: mdl.prefill(p, cfg, toks, c)
         if overlay is not None:
+            if tile_budget is None:
+                tile_budget = max(1, overlay.grid.num_tiles // 4)
+            self.tile_budget = tile_budget
             self._decode = overlay.jit(step, strict=False,
-                                       name=f"{cfg.name}.decode")
+                                       name=f"{cfg.name}.decode",
+                                       tile_budget=tile_budget)
+            self._prefill = overlay.jit(pf, strict=False,
+                                        name=f"{cfg.name}.prefill",
+                                        tile_budget=tile_budget)
         else:
+            self.tile_budget = tile_budget
             self._decode = jax.jit(step)
+            self._prefill = jax.jit(pf)
         self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
 
     # -- admission -----------------------------------------------------------
@@ -75,7 +92,7 @@ class ServeEngine:
         cfg = self.cfg
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         c1 = mdl.init_cache(cfg, 1, self.max_len)
-        logits, c1 = mdl.prefill(self.params, cfg, prompt, c1)
+        logits, c1 = self._prefill(self.params, prompt, c1)
 
         def place(pool, one):
             if one.dtype == jnp.int32:
@@ -115,9 +132,13 @@ class ServeEngine:
             req = self.slot_req[slot]
             tok = int(next_tok[slot])
             req.out.append(tok)
+            req.decode_steps += 1
             self.slot_pos = self.slot_pos.at[slot].add(1)
             self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
-            if len(req.out) >= req.max_new_tokens or \
+            # retire on decode steps, not len(out): out already holds the
+            # prefill-produced token, which is not a decode step — counting
+            # it finished requests one decode step early
+            if req.decode_steps >= req.max_new_tokens or \
                     int(self.slot_pos[slot]) + 1 >= self.max_len:
                 req.done = True
                 finished.append(req)

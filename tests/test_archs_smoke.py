@@ -15,6 +15,9 @@ from repro.models import params as pm
 from repro.models.transformer import model_spec
 from repro.optim import adamw_init, adamw_update
 
+# the full arch matrix takes minutes; the tier-1 CI lane skips it
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 B, S = 2, 32
 

@@ -218,3 +218,27 @@ def test_fragmentation_metric():
     fixed = {n.node_id: large[i % len(large)] for i, n in enumerate(ops)}
     pl = place_static(g, grid, fixed)
     assert pl.fragmentation(g) == 1.0          # SMALL ops squat all LARGE tiles
+
+
+def test_cache_clear_preserves_stats_like_evict_prefix():
+    c = BitstreamCache(capacity=4)
+    c.get_or_compile("a:1", lambda: 1)
+    c.get_or_compile("a:1", lambda: 1)         # hit
+    c.put("b:2", 2)
+    assert c.stats.insertions == 2             # one miss-compile + one put
+    c.clear()
+    assert len(c) == 0
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert c.stats.insertions == 2             # history survives the flush
+    assert c.stats.evictions == 2              # a flush IS evictions
+
+
+def test_cache_keys_and_evict_keys():
+    c = BitstreamCache(capacity=4)
+    c.put("x:1", 1)
+    c.put("y:2", 2)
+    c.put("x:3", 3)
+    assert c.keys() == ["x:1", "y:2", "x:3"]
+    assert c.evict_keys(["x:1", "not-there"]) == 1
+    assert "x:1" not in c and len(c) == 2
+    assert c.stats.evictions == 1

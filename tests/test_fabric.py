@@ -1,0 +1,378 @@
+"""Fabric residency tests: multi-tenant placement under occupancy, LRU
+reclaim, the coupled evict path, defragmentation, and reconfigure flush."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, FabricError, Overlay, PlacementError,
+                        PlacementPolicy, TileGrid, compile_graph,
+                        place_dynamic, place_static, saxpy_graph,
+                        vmul_reduce_graph)
+
+
+# ---------------------------------------------------------------------------
+# placement under occupancy
+# ---------------------------------------------------------------------------
+def test_dynamic_placement_packs_around_occupied_tiles():
+    g = vmul_reduce_graph(128)
+    grid = TileGrid(3, 3)
+    occ = {(0, 0), (0, 1)}
+    pl = place_dynamic(g, grid, occupied=occ)
+    assert not (set(pl.assignment.values()) & occ)
+
+
+def test_dynamic_placement_saturation_under_occupancy_raises():
+    g = saxpy_graph(64)
+    grid = TileGrid(2, 2, large_fraction=0.0)
+    with pytest.raises(PlacementError):
+        place_dynamic(g, grid, occupied=set(grid.coords()))
+
+
+def test_dynamic_placement_large_pressure_raises():
+    # free SMALL tiles exist, but the LARGE reduce op has nowhere to go:
+    # every LARGE tile is held by a resident -> pressure, not silent overwrite
+    g = vmul_reduce_graph(64)
+    grid = TileGrid(3, 3)                     # LARGE at (0,0),(1,1),(2,2)
+    with pytest.raises(PlacementError):
+        place_dynamic(g, grid, occupied=set(grid.large_coords()))
+
+
+def test_static_placement_packs_into_free_tiles_only():
+    g = saxpy_graph(64)
+    grid = TileGrid(3, 3, large_fraction=0.0)
+    occ = {(0, 0), (0, 1), (0, 2)}
+    pl = place_static(g, grid, occupied=occ)
+    assert not (set(pl.assignment.values()) & occ)
+
+
+def test_static_fixed_on_occupied_tile_raises():
+    g = vmul_reduce_graph(64)
+    ops = g.op_nodes()
+    fixed = {ops[0].node_id: (0, 1), ops[1].node_id: (0, 0)}
+    with pytest.raises(PlacementError):
+        place_static(g, TileGrid(3, 3), fixed, occupied={(0, 1)})
+
+
+def test_tile_budget_caps_footprint():
+    # 4 SMALL ops, budget 2 -> at most 2 distinct tiles (rest co-locate)
+    g = saxpy_graph(64)
+    g2 = vmul_reduce_graph(64)
+    pl = place_dynamic(g, TileGrid(3, 3, large_fraction=0.0), max_tiles=2)
+    assert len(set(pl.assignment.values())) <= 2
+    # soft cap: a LARGE op may exceed the budget rather than fail
+    pl2 = place_dynamic(g2, TileGrid(3, 3), max_tiles=1)
+    tiles = set(pl2.assignment.values())
+    assert len(tiles) == 2                     # SMALL tile + forced LARGE tile
+
+
+# ---------------------------------------------------------------------------
+# co-residency (acceptance: two jitted fns share one fabric)
+# ---------------------------------------------------------------------------
+def test_two_jitted_fns_simultaneously_resident_disjoint_tiles():
+    ov = Overlay(3, 3)
+
+    @ov.jit
+    def dot(a, b):
+        return jnp.sum(a * b)
+
+    @ov.jit
+    def affine(x):
+        return x * 2.0 + 1.0
+
+    a = jnp.linspace(0.0, 1.0, 64)
+    np.testing.assert_allclose(dot(a, a), jnp.sum(a * a), rtol=1e-6)
+    np.testing.assert_allclose(affine(a), a * 2.0 + 1.0, rtol=1e-6)
+
+    residents = list(ov.fabric.residents.values())
+    assert sorted(r.name for r in residents) == ["affine", "dot"]
+    t0, t1 = (r.tiles for r in residents)
+    assert t0 and t1 and not (t0 & t1)         # both resident, disjoint tiles
+    fab = ov.describe()["fabric"]
+    assert fab["tiles_used"] == len(t0 | t1)
+    assert ov.stats.downloads == 2 and ov.stats.reclaims == 0
+
+
+def test_assemble_hit_reuses_resident_placement_and_tiles():
+    ov = Overlay(3, 3)
+    g = vmul_reduce_graph(128)
+    acc1 = ov.assemble(g)
+    occupied = ov.fabric.occupied()
+    acc2 = ov.assemble(vmul_reduce_graph(128))     # equivalent graph object
+    assert acc2.placement.assignment == acc1.placement.assignment
+    assert ov.fabric.occupied() == occupied
+    assert len(ov.fabric) == 1                     # one resident, not two
+    assert ov.cache.stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# LRU reclaim
+# ---------------------------------------------------------------------------
+def _tiny_overlay():
+    # 2x2 all-SMALL fabric; each saxpy takes 2 tiles -> capacity 2 residents
+    return Overlay(2, 2, large_fraction=0.0)
+
+
+def test_capacity_pressure_triggers_lru_reclaim():
+    ov = _tiny_overlay()
+    g1, g2, g3 = (saxpy_graph(32, alpha=float(i)) for i in (1, 2, 3))
+    ov.assemble(g1)
+    ov.assemble(g2)
+    assert ov.fabric.free() == []                  # saturated
+    ov.assemble(g3)                                # must reclaim
+    assert ov.stats.reclaims == 1
+    assert ov.stats.evictions == 1
+    assert len(ov.fabric) == 2
+
+
+def test_lru_reclaim_evicts_least_recently_used():
+    ov = _tiny_overlay()
+    g1, g2, g3 = (saxpy_graph(32, alpha=float(i)) for i in (1, 2, 3))
+    r1 = ov.assemble(g1).resident_id
+    r2 = ov.assemble(g2).resident_id
+    ov.assemble(g1)                                # touch g1 -> g2 is LRU
+    r3 = ov.assemble(g3).resident_id               # evicts g2, not g1
+    live = set(ov.fabric.residents)
+    assert live == {r1, r3}
+    assert r2 not in live
+
+
+def test_reclaim_couples_tile_release_with_bitstream_eviction():
+    ov = _tiny_overlay()
+    g1, g2, g3 = (saxpy_graph(32, alpha=float(i)) for i in (1, 2, 3))
+    ov.assemble(g1)
+    ov.assemble(g2)
+    assert len(ov.cache) == 2
+    ov.assemble(g3)                                # reclaims g1 (LRU)
+    assert len(ov.cache) == 2                      # g1's bitstream went too
+    ov.assemble(g1)                                # back in: re-download
+    assert ov.cache.stats.misses == 4              # not a stale-placement hit
+
+
+def test_jitted_fn_reassembles_after_its_resident_is_reclaimed():
+    ov = _tiny_overlay()
+    fns = []
+    for i in range(3):
+        # two op nodes (mul + add) -> 2 tiles each; 3 fns > 4-tile fabric
+        fns.append(ov.jit((lambda s: lambda x: x * s + s)(float(i + 2)),
+                          name=f"scale{i}"))
+    x = jnp.ones((16,))
+    np.testing.assert_allclose(fns[0](x), x * 2.0 + 2.0)
+    np.testing.assert_allclose(fns[1](x), x * 3.0 + 3.0)
+    np.testing.assert_allclose(fns[2](x), x * 4.0 + 4.0)  # reclaims scale0
+    assert ov.stats.reclaims >= 1
+    downloads = ov.stats.downloads
+    np.testing.assert_allclose(fns[0](x), x * 2.0 + 2.0)  # stale entry re-assembles
+    assert ov.stats.downloads == downloads + 1
+    names = {r.name for r in ov.fabric.residents.values()}
+    assert "scale0" in names
+
+
+def test_unplaceable_graph_raises_without_evicting_residents():
+    # a LARGE op on a fabric with no LARGE tiles can never be placed —
+    # reclaiming could not help, so innocent residents must survive
+    ov = Overlay(2, 2, large_fraction=0.0)
+    ov.assemble(saxpy_graph(32))
+    with pytest.raises(PlacementError):
+        ov.assemble(vmul_reduce_graph(32))
+    assert len(ov.fabric) == 1                     # resident untouched
+    assert ov.stats.reclaims == 0 and len(ov.cache) == 1
+
+
+# ---------------------------------------------------------------------------
+# explicit eviction / reconfigure / defragment
+# ---------------------------------------------------------------------------
+def test_evict_releases_tiles_and_bitstreams_in_one_path():
+    ov = Overlay(3, 3)
+    ov.assemble(vmul_reduce_graph(128))
+    ov.assemble(saxpy_graph(128))
+    used = len(ov.fabric.occupied())
+    removed = ov.evict("vmul_reduce")
+    assert removed == 1
+    assert len(ov.fabric) == 1
+    assert len(ov.fabric.occupied()) < used
+    assert all(r.name == "saxpy" for r in ov.fabric.residents.values())
+
+
+def test_reconfigure_flushes_residency_and_keeps_cache_stats():
+    ov = Overlay(3, 3)
+    ov.assemble(vmul_reduce_graph(128))
+    ov.assemble(saxpy_graph(128))
+    misses = ov.cache.stats.misses
+    ov.reconfigure(policy=PlacementPolicy.STATIC)
+    assert len(ov.fabric) == 0 and ov.fabric.occupied() == set()
+    assert len(ov.cache) == 0
+    assert ov.cache.stats.misses == misses         # history survives the flush
+    acc = ov.assemble(vmul_reduce_graph(128))
+    assert acc.placement.policy is PlacementPolicy.STATIC
+    assert len(ov.fabric) == 1
+
+
+def test_defragment_compacts_surviving_residents():
+    ov = _tiny_overlay()
+    g1, g2 = saxpy_graph(32, alpha=1.0), saxpy_graph(32, alpha=2.0)
+    g1.name, g2.name = "saxpy_a", "saxpy_b"        # evict-by-name is per name
+    ov.assemble(g1)                                # tiles (0,0),(0,1)
+    acc2 = ov.assemble(g2)                         # tiles (1,0),(1,1)
+    ov.evict(g1)                                   # hole at the front
+    tiles_before = set(acc2.placement.assignment.values())
+    moved = ov.defragment()
+    assert moved == 1 and ov.stats.defrags == 1
+    (res,) = ov.fabric.residents.values()
+    assert res.tiles != tiles_before               # compacted forward
+    assert res.tiles == {(0, 0), (0, 1)}
+    assert res.cache_keys == ()                    # moved => bitstream dropped
+    acc2b = ov.assemble(g2)                        # re-download at new tiles
+    assert set(acc2b.placement.assignment.values()) == {(0, 0), (0, 1)}
+
+
+# ---------------------------------------------------------------------------
+# fabric-wide fragmentation metric
+# ---------------------------------------------------------------------------
+def test_fabric_fragmentation_with_coresident_graphs():
+    # 2x2, large_fraction=0.5 -> LARGE at (0,0),(1,0).  Two all-SMALL saxpy
+    # graphs: the first takes the SMALL tiles, the second is forced onto the
+    # LARGE ones -> every occupied LARGE tile is wasted on SMALL ops.
+    ov = Overlay(2, 2, large_fraction=0.5)
+    ov.assemble(saxpy_graph(32, alpha=1.0))
+    assert ov.fabric.fragmentation() == 0.0
+    ov.assemble(saxpy_graph(32, alpha=2.0))
+    assert ov.fabric.fragmentation() == 1.0
+    assert ov.describe()["fabric"]["fragmentation"] == 1.0
+
+
+def test_fabric_admit_overlap_is_an_error():
+    ov = Overlay(3, 3)
+    acc = ov.assemble(vmul_reduce_graph(64))
+    fab = ov.fabric
+    res = fab.get(acc.resident_id)
+    with pytest.raises(FabricError):
+        fab.admit("other", "other", res.graph, res.placement, res.program)
+
+
+# ---------------------------------------------------------------------------
+# review regressions: stale generations, pinned identity, static soft cap
+# ---------------------------------------------------------------------------
+def test_stale_handles_invalidated_across_reconfigure_readmission():
+    # generations must stay monotonic across a fabric flush: a pre-flush
+    # handle must not validate against a post-flush re-admission
+    ov = Overlay(3, 3)
+    fn = lambda a, b: jnp.sum(a * b)
+    j1 = ov.jit(fn, name="dot")
+    j2 = ov.jit(fn, name="dot")
+    a = jnp.ones((32,))
+    j1(a, a)
+    j2(a, a)                                       # both hold gen-N handles
+    ov.reconfigure(policy=PlacementPolicy.STATIC)
+    j1(a, a)                                       # re-admits under STATIC
+    assembled = ov.stats.assemblies
+    j2(a, a)                                       # must re-assemble too
+    assert ov.stats.assemblies == assembled + 1
+    assert j2.accelerator(a, a).placement.policy is PlacementPolicy.STATIC
+
+
+def test_assemble_distinguishes_fixed_pinnings():
+    ov = Overlay(3, 3, policy=PlacementPolicy.STATIC)
+    g1, g2 = vmul_reduce_graph(64), vmul_reduce_graph(64)
+    ops1, ops2 = g1.op_nodes(), g2.op_nodes()
+    f1 = {ops1[0].node_id: (0, 1), ops1[1].node_id: (0, 0)}
+    f2 = {ops2[0].node_id: (2, 1), ops2[1].node_id: (2, 2)}
+    acc1 = ov.assemble(g1, fixed=f1)
+    acc2 = ov.assemble(g2, fixed=f2)               # same graph, new pins
+    assert acc1.placement.assignment == f1
+    assert acc2.placement.assignment == f2         # pins honored, no alias
+    assert len(ov.fabric) == 2
+
+
+def test_defragment_never_moves_pinned_residents():
+    ov = Overlay(2, 2, large_fraction=1.0, policy=PlacementPolicy.STATIC)
+    g1, g2 = saxpy_graph(32, alpha=1.0), saxpy_graph(32, alpha=2.0)
+    g1.name, g2.name = "pinned", "floating"
+    ops = g1.op_nodes()
+    pins = {ops[0].node_id: (1, 0), ops[1].node_id: (1, 1)}
+    ov.assemble(g1, fixed=pins)
+    ov.policy = PlacementPolicy.DYNAMIC
+    ov.assemble(g2)                                # takes (0,0),(0,1)
+    ov.defragment()
+    res = {r.name: r for r in ov.fabric.residents.values()}
+    assert res["pinned"].tiles == {(1, 0), (1, 1)}  # anchor did not move
+
+
+def test_static_budget_is_soft_for_large_ops():
+    # budget window holds only SMALL tiles, but a free LARGE tile exists
+    # outside it: the LARGE op claims it instead of raising pressure
+    g = vmul_reduce_graph(64)
+    grid = TileGrid(3, 3)                          # LARGE at (0,0),(1,1),(2,2)
+    pl = place_static(g, grid, occupied={(0, 0)}, max_tiles=2)
+    large = set(grid.large_coords())
+    assert set(pl.assignment.values()) & large     # Reduce got a LARGE tile
+
+
+def test_resident_download_count_survives_reclaim():
+    ov = _tiny_overlay()
+    g1, g2, g3 = (saxpy_graph(32, alpha=float(i)) for i in (1, 2, 3))
+    rid1 = ov.assemble(g1).resident_id
+    ov.assemble(g2)
+    ov.assemble(g3)                                # reclaims g1
+    assert ov.fabric.get(rid1) is None
+    acc = ov.assemble(g1)                          # second download of g1
+    assert ov.fabric.get(acc.resident_id).downloads == 2
+
+
+def test_defragment_recompiles_controller_program():
+    # 1x3 all-SMALL strip: A takes (0,0),(0,1); B lands on (0,2) with both
+    # ops co-located (0 hops).  After A is evicted, defrag moves B onto two
+    # adjacent tiles — its controller program must be recompiled to match.
+    ov = Overlay(1, 3, large_fraction=0.0)
+    g1, g2 = saxpy_graph(32, alpha=1.0), saxpy_graph(32, alpha=2.0)
+    g1.name, g2.name = "first", "second"
+    ov.assemble(g1)
+    ov.assemble(g2)
+    (res2,) = [r for r in ov.fabric.residents.values() if r.name == "second"]
+    old_mix = dict(res2.program.mix())
+    ov.evict(g1)
+    assert ov.defragment() == 1
+    (res2,) = ov.fabric.residents.values()
+    assert res2.program.mix() == compile_graph(res2.graph, res2.placement).mix()
+    assert res2.program.mix() != old_mix           # routes actually changed
+
+
+def test_resident_hits_do_not_count_reconfigurations():
+    ov = Overlay(3, 3)
+    g1, g2 = vmul_reduce_graph(64), saxpy_graph(64)
+    ov.assemble(g1)
+    ov.assemble(g2)
+    base = ov.stats.reconfigurations
+    for _ in range(3):                             # pure resident hits
+        ov.assemble(g1)
+        ov.assemble(g2)
+    assert ov.stats.reconfigurations == base       # fabric never changed
+
+
+def test_resident_hit_reuses_built_accelerator_object():
+    ov = Overlay(3, 3)
+    g = vmul_reduce_graph(128)
+    acc1 = ov.assemble(g)
+    acc2 = ov.assemble(vmul_reduce_graph(128))
+    # hit path must not rebuild the executable: same underlying program
+    # object, same placement object, fresh fn only from the cache
+    assert acc2.program is acc1.program
+    assert acc2.placement is acc1.placement
+
+
+def test_cache_capacity_eviction_counts_as_redownload():
+    # a bitstream store smaller than the fabric's region count: the cache's
+    # own LRU drops a resident's bitstream while it stays fabric-resident;
+    # re-assembly must recompile AND count a download, and the resident's
+    # key ledger must not go stale
+    ov = Overlay(3, 3, cache_capacity=1)
+    g1, g2 = vmul_reduce_graph(64), saxpy_graph(64)
+    r1 = ov.assemble(g1).resident_id
+    ov.assemble(g2)                        # capacity-evicts g1's bitstream
+    assert len(ov.fabric) == 2             # both still fabric-resident
+    downloads = ov.stats.downloads
+    acc = ov.assemble(g1)                  # resident hit, bitstream gone
+    assert ov.stats.downloads == downloads + 1
+    assert ov.cache.stats.misses == 3      # real recompile happened
+    res = ov.fabric.get(r1)
+    assert all(k in ov.cache for k in res.cache_keys)

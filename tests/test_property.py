@@ -9,6 +9,9 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
+# hypothesis sweeps take minutes; the tier-1 CI lane skips them
+pytestmark = pytest.mark.slow
+
 from repro.core import (Graph, Overlay, PlacementPolicy, TileGrid, assemble,
                         compile_graph, place, run_program)
 from repro.core import patterns

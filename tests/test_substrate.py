@@ -202,14 +202,16 @@ def test_serve_engine_greedy_matches_manual_decode():
     engine = ServeEngine(params, cfg, batch=2, max_len=64)
     engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
     done = engine.run_until_drained()
-    assert len(done) == 1 and len(done[0].out) == 5
+    # out = 1 prefill-produced token + max_new_tokens decode-step tokens
+    assert len(done) == 1 and len(done[0].out) == 6
+    assert done[0].decode_steps == 5
 
     # manual greedy loop
     caches = mdl.init_cache(cfg, 1, 64)
     toks = jnp.asarray(prompt, jnp.int32)[None]
     logits, caches = mdl.prefill(params, cfg, toks, caches)
     want = [int(jnp.argmax(logits[0]))]
-    for _ in range(4):
+    for _ in range(5):
         logits, caches = mdl.decode_step(
             params, cfg, jnp.asarray([[want[-1]]], jnp.int32), caches)
         want.append(int(jnp.argmax(logits[0])))
@@ -224,4 +226,25 @@ def test_serve_engine_batched_slots_recycle():
         engine.submit(Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=3))
     done = engine.run_until_drained()
     assert sorted(r.rid for r in done) == [0, 1, 2, 3]
-    assert all(len(r.out) == 3 for r in done)
+    assert all(len(r.out) == 4 for r in done)          # prefill tok + 3 steps
+    assert all(r.decode_steps == 3 for r in done)
+
+
+def test_serve_engine_retires_on_decode_steps_not_prefill_token():
+    """Regression: the prefill-produced token sits in req.out before the
+    first decode tick; retiring on len(out) finished requests one decode
+    step early.  A request asking for N new tokens must take exactly N
+    batched decode steps."""
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg, batch=1, max_len=64)
+    engine.submit(Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=3))
+
+    ticks = 0
+    done: list[Request] = []
+    while not done and ticks < 10:
+        done.extend(engine.step())
+        ticks += 1
+    assert ticks == 3                          # one tick per decode step
+    assert done[0].decode_steps == 3
+    assert len(done[0].out) == 4               # prefill token + 3 decode

@@ -254,7 +254,9 @@ def test_traced_rms_matches_manual_graph_exactly():
 
     out_traced = jitted(sig, win)
     acc_traced = jitted.accelerator(sig, win)
-    acc_manual = ov.assemble(g)
+    # same-overlay assembly would co-reside (packing around the traced
+    # accelerator's tiles); the trace==manual identity holds fabric-to-fabric
+    acc_manual = Overlay(3, 3).assemble(g)
     out_manual = acc_manual(sig, win)
 
     # numerically identical, identical placement, identical ISA mix
@@ -263,3 +265,44 @@ def test_traced_rms_matches_manual_graph_exactly():
     assert acc_traced.placement.assignment == acc_manual.placement.assignment
     assert acc_traced.instruction_mix == acc_manual.instruction_mix
     assert len(acc_traced.program) == len(acc_manual.program)
+
+
+# ---------------------------------------------------------------------------
+# lower() memoization (traced-once invariant)
+# ---------------------------------------------------------------------------
+def test_lower_is_memoized_and_reused_by_call():
+    ov = Overlay(3, 3)
+
+    def dot(a, b):
+        return jnp.sum(a * b)
+
+    jitted = ov.jit(dot)
+    a = jnp.ones((64,))
+    l1 = jitted.lower(a, a)
+    l2 = jitted.lower(a, a)
+    assert l1 is l2                            # second lower(): pure memo hit
+    assert ov.stats.traces == 1
+    np.testing.assert_allclose(jitted(a, a), 64.0)
+    assert ov.stats.traces == 1                # __call__ reused the trace
+    l3 = jitted.lower(jnp.ones((128,)), jnp.ones((128,)))
+    assert l3 is not l1                        # new signature traces afresh
+    assert ov.stats.traces == 2
+
+
+def test_aot_after_lazy_jit_still_compiles_eagerly():
+    """Regression: aot() on a signature already lazily jitted used to hit
+    the cache and silently skip the eager compile, so the first real call
+    still paid XLA at serve time."""
+    ov = Overlay(3, 3)
+
+    def dot(a, b):
+        return jnp.sum(a * b)
+
+    a = jnp.ones((32,))
+    ov.jit(dot)(a, a)                           # lazy jax.jit entry cached
+    t0 = ov.cache.stats.compile_seconds
+    sds = jax.ShapeDtypeStruct((32,), jnp.float32)
+    ov.aot(dot, sds, sds)
+    assert ov.cache.stats.compile_seconds > t0  # eager compile actually paid
+    assert any(isinstance(ov.cache.peek(k), jax.stages.Compiled)
+               for k in ov.cache.keys())
