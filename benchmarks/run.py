@@ -1,26 +1,69 @@
-"""Run every benchmark; print ``name,us_per_call,derived`` CSV."""
+"""Run every benchmark; print ``name,us_per_call,derived`` CSV.
+
+``--json [PATH]`` additionally writes the rows as structured JSON (default
+``BENCH_<utc-timestamp>.json``) so the per-PR perf trajectory can be
+tracked mechanically — each entry is ``{"name", "us_per_call", "derived"}``
+plus a run-level header with the timestamp and benchmark module list.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 import traceback
 
 
-def main() -> None:
-    from benchmarks import (branch_speculation, fig3_vmul_reduce, isa_mix,
-                            pr_overhead, residency_churn, tile_granularity)
-    modules = [fig3_vmul_reduce, pr_overhead, isa_mix, tile_granularity,
-               branch_speculation, residency_churn]
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        value: float | None = float(us)
+    except ValueError:
+        value = None
+    return {"name": name, "us_per_call": value, "derived": derived}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also write results as JSON (default "
+                         "BENCH_<timestamp>.json)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (branch_speculation, download_pipeline,
+                            fig3_vmul_reduce, isa_mix, pr_overhead,
+                            residency_churn, tile_granularity)
+    modules = [fig3_vmul_reduce, pr_overhead, download_pipeline, isa_mix,
+               tile_granularity, branch_speculation, residency_churn]
     print("name,us_per_call,derived")
+    rows: list[str] = []
     failed = 0
     for mod in modules:
         try:
             for line in mod.main():
                 print(line)
+                rows.append(line)
         except Exception:
             failed += 1
             print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            rows.append(f"{mod.__name__},ERROR,")
             traceback.print_exc()
+
+    if args.json is not None:
+        path = args.json or time.strftime("BENCH_%Y%m%d_%H%M%S.json",
+                                          time.gmtime())
+        payload = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "modules": [m.__name__ for m in modules],
+            "failed_modules": failed,
+            "results": [_parse_row(r) for r in rows],
+        }
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {path}", file=sys.stderr)
+
     if failed:
         sys.exit(1)
 

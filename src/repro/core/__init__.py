@@ -12,6 +12,7 @@ Public API (frontend first — the paper's programming model):
   interpreter.run_program / assemble          — eager ISA + JIT assembly
   cache.BitstreamCache                        — compiled-artifact (PR) cache
   fabric.Fabric / ResidentAccelerator         — shared-fabric tile residency
+  scheduler.DownloadScheduler                 — async PR-download pipeline
 """
 
 from repro.core.cache import BitstreamCache, aot_compile, cache_key, signature_of
@@ -26,10 +27,12 @@ from repro.core.patterns import (LIBRARY, Operator, TileClass, register_call,
                                  register_op)
 from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
                                   TileGrid, place, place_dynamic, place_static)
+from repro.core.scheduler import DownloadHandle, DownloadScheduler
 from repro.core.trace import Lowered, TraceError, trace_to_graph
 
 __all__ = [
-    "AssembledAccelerator", "BitstreamCache", "Fabric", "FabricError",
+    "AssembledAccelerator", "BitstreamCache", "DownloadHandle",
+    "DownloadScheduler", "Fabric", "FabricError",
     "Graph", "Instruction",
     "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
     "Placement", "PlacementError", "PlacementPolicy", "Program",

@@ -101,6 +101,15 @@ class BitstreamCache:
             self._store.popitem(last=False)
             self.stats.evictions += 1
 
+    def insert_compiled(self, key: str, exe: Any, compile_seconds: float) -> None:
+        """Store an executable compiled *outside* the cache (the async
+        download pipeline compiles on a worker thread, then publishes here).
+        Books the same ledger entries a ``get_or_compile`` miss would —
+        a background download is still a download."""
+        self.stats.misses += 1
+        self.stats.compile_seconds += compile_seconds
+        self.put(key, exe)
+
     def peek(self, key: str) -> Any:
         """The stored executable for ``key`` (or None) without touching
         LRU order or hit/miss statistics — for introspection, not dispatch."""
@@ -141,13 +150,17 @@ class BitstreamCache:
 
 def aot_compile(fn: Callable[..., Any], abstract_args: tuple,
                 mesh: jax.sharding.Mesh | None = None,
-                in_shardings: Any = None, out_shardings: Any = None):
+                in_shardings: Any = None, out_shardings: Any = None,
+                jit_kwargs: dict[str, Any] | None = None):
     """Lower + compile ``fn`` against abstract inputs — produce the bitstream.
 
     With a mesh, compiles the SPMD program for that topology (the multi-tile
-    bitstream); without, a single-device executable.
+    bitstream); without, a single-device executable.  ``jit_kwargs`` (e.g.
+    ``donate_argnums``) must match what the lazy path would have passed to
+    ``jax.jit`` — the cache keys on them, so the compiled artifact has to
+    honor them too.
     """
-    kwargs = {}
+    kwargs = dict(jit_kwargs or {})
     if in_shardings is not None:
         kwargs["in_shardings"] = in_shardings
     if out_shardings is not None:

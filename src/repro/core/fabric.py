@@ -54,6 +54,7 @@ class ResidentAccelerator:
     fixed: "dict[int, Coord] | None" = None  # pinned tiles (honored on re-place)
     cache_keys: tuple[str, ...] = ()   # bitstream-cache entries owned
     downloads: int = 1             # times this accelerator was placed+downloaded
+    download_cost: float = 0.0     # modeled re-download cost (compile seconds)
     acc: Any = None                # built AssembledAccelerator (hit fast path)
 
 
@@ -76,6 +77,7 @@ class Fabric:
         self._tick = 0
         self._generation = 0
         self._download_counts: dict[str, int] = {}   # per-rid, survives evict
+        self._download_costs: dict[str, float] = {}  # rid -> measured compile s
 
     def reset(self, grid: TileGrid | None = None) -> list[ResidentAccelerator]:
         """Flush every resident (optionally swapping the grid) while keeping
@@ -126,6 +128,37 @@ class Fabric:
             return None
         return min(self._residents.values(), key=lambda r: r.last_used)
 
+    def reclaim_victim(self, *, cost_aware: bool = False
+                       ) -> ResidentAccelerator | None:
+        """The resident to reclaim under placement pressure.
+
+        Pure-LRU by default.  ``cost_aware=True`` scores each resident by
+        staleness *per second of re-download cost* — ``age / download_cost``
+        — and evicts the maximum: between two equally-cold residents the
+        cheap-to-redownload one goes first, and a hot-but-cheap resident can
+        be preferred over a cold one whose bitstream takes long to rebuild.
+
+        A resident with no measurement yet (admitted, first compile still in
+        flight) is priced at the mean of the measured costs — neutral, so it
+        is neither the default victim nor unevictable.  With no measurements
+        anywhere every score degenerates to ``age`` and the choice is
+        exactly LRU.
+        """
+        if not self._residents:
+            return None
+        if not cost_aware:
+            return self.lru()
+        now = self._tick + 1
+        known = [c for c in self._download_costs.values() if c > 0.0]
+        prior = sum(known) / len(known) if known else 1.0
+
+        def score(r: ResidentAccelerator) -> float:
+            age = now - r.last_used
+            cost = self._download_costs.get(r.rid) or r.download_cost or prior
+            return age / (cost + 1e-3)
+
+        return max(self._residents.values(), key=score)
+
     def lru_order(self) -> list[ResidentAccelerator]:
         """Residents least-recently-used first."""
         return sorted(self._residents.values(), key=lambda r: r.last_used)
@@ -161,9 +194,25 @@ class Fabric:
             occupants=_occupants_of(graph, placement),
             generation=self._generation, last_used=self._tick,
             tile_budget=tile_budget, fixed=fixed,
-            downloads=self._download_counts[rid])
+            downloads=self._download_counts[rid],
+            download_cost=self._download_costs.get(rid, 0.0))
         self._residents[rid] = res
         return res
+
+    def record_download_cost(self, rid: str, seconds: float) -> None:
+        """Feed one measured compile time into the per-rid cost model (EWMA,
+        persisted across evictions like ``_download_counts``) — the price a
+        future reclaim of this resident would pay to re-download."""
+        prev = self._download_costs.get(rid)
+        cost = seconds if prev is None else 0.5 * prev + 0.5 * seconds
+        self._download_costs[rid] = cost
+        res = self._residents.get(rid)
+        if res is not None:
+            res.download_cost = cost
+
+    def download_cost(self, rid: str) -> float:
+        """Modeled re-download cost in seconds (0.0 when never measured)."""
+        return self._download_costs.get(rid, 0.0)
 
     def release(self, rid: str) -> ResidentAccelerator | None:
         """Free one resident's PR regions; returns it (for bitstream cleanup)."""
@@ -227,6 +276,7 @@ class Fabric:
                 res.rid: {"name": res.name,
                           "tiles": sorted(res.tiles),
                           "downloads": res.downloads,
+                          "download_cost": round(res.download_cost, 6),
                           "last_used": res.last_used}
                 for res in self.lru_order()
             },

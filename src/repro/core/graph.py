@@ -155,6 +155,21 @@ class Graph:
         self._shape_cache = avals
         return avals
 
+    def seal_shapes(self) -> None:
+        """Adopt externally-recorded node avals as the shape cache.
+
+        The tracer already knows every equation's output aval, so traced
+        graphs don't need :meth:`infer_shapes`'s per-node ``jax.eval_shape``
+        sweep (which re-traces each operator fn — ~1 ms/node, the dominant
+        cost of validating large traced graphs).  Any later mutation clears
+        the cache and falls back to full inference.
+        """
+        missing = [n.node_id for n in self.nodes if n.aval is None]
+        if missing:
+            raise ValueError(
+                f"seal_shapes: nodes without avals: {missing[:5]}")
+        self._shape_cache = {n.node_id: n.aval for n in self.nodes}
+
     def validate(self) -> None:
         if not self.output_ids:
             raise ValueError(f"graph {self.name!r} has no outputs")

@@ -242,8 +242,10 @@ def wrap_sharded(acc: AssembledAccelerator, graph: Graph,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     n_in = len(graph.input_ids)
-    smapped = jax.shard_map(
+    smapped = shard_map(
         acc.fn, mesh=mesh, in_specs=(P(),) * n_in, out_specs=P(),
         check_vma=False)
     return jax.jit(smapped)

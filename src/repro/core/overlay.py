@@ -21,6 +21,10 @@ Also provided, mirroring the paper's runtime controls:
 
 * ``Overlay.aot(fn, *avals)``   — ahead-of-time bitstream-cache population
   (pay the "PR download" before traffic arrives),
+* ``Overlay(async_downloads=True)`` — the asynchronous PR-download pipeline
+  (DESIGN.md §5): misses are served immediately by a fallback while the
+  bitstream compiles on a background scheduler and swaps in atomically;
+  ``jitted.prefetch(*args)`` starts downloads ahead of demand,
 * ``Overlay.reconfigure()``     — flush the fabric: placements + bitstreams,
 * ``Overlay.evict(name)``       — free one accelerator's PR regions,
 * ``Overlay.assemble(graph)``   — the low-level IR path (hand-built Graphs),
@@ -34,7 +38,10 @@ default 3x3 overlay for scripts that don't manage a fabric explicitly.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import warnings
+import weakref
 from typing import Any, Callable
 
 import jax
@@ -48,6 +55,11 @@ from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
 from repro.core.placement import (Coord, Placement, PlacementError,
                                   PlacementPolicy, TileGrid, place)
+from repro.core.scheduler import DownloadHandle, DownloadScheduler
+
+# a persistently failing background compile stops being retried after this
+# many attempts; the entry keeps serving from its fallback
+_MAX_DOWNLOAD_FAILURES = 3
 
 
 @dataclasses.dataclass
@@ -60,6 +72,10 @@ class OverlayStats:
     evictions: int = 0          # residents released (explicit or reclaimed)
     reclaims: int = 0           # LRU evictions forced by placement pressure
     defrags: int = 0            # defragmentation passes that moved residents
+    prefetches: int = 0         # downloads begun on a hint, not a demand miss
+    prefetch_hits: int = 0      # demand requests satisfied by a prior prefetch
+    fallback_calls: int = 0     # calls served by a fallback mid-download
+    stale_downloads: int = 0    # background results dropped (generation flushed)
 
 
 @dataclasses.dataclass
@@ -70,6 +86,24 @@ class _JitEntry:
     acc: interp.AssembledAccelerator | None   # None: traced but not assembled
     trace_seconds: float            # capture + jaxpr->Graph lowering
     assemble_seconds: float = 0.0   # placement + ISA compile + cache insert
+    closed: Callable[..., Any] | None = None  # traced closure (eager fallback)
+    pending: DownloadHandle | None = None     # in-flight background download
+    jit_kwargs: dict[str, Any] | None = None  # last demand's kwargs (donation)
+    download_failures: int = 0                # consecutive failed compiles
+
+
+@dataclasses.dataclass
+class _PendingDownload:
+    """Frozen snapshot handed to the background compile: everything the
+    commit needs to publish the bitstream — or to recognize it went stale."""
+
+    rid: str
+    generation: int
+    key: str
+    base: interp.AssembledAccelerator   # un-jitted; placed at `generation`
+    avals: tuple
+    jit_kwargs: dict[str, Any] | None = None   # the key includes these, so
+                                               # the executable must honor them
 
 
 class JitAssembled:
@@ -98,8 +132,17 @@ class JitAssembled:
         self._entries: dict[str, _JitEntry] = {}
         self.__name__ = self.name
         self.__doc__ = getattr(fn, "__doc__", None)
+        overlay._register(self)
 
     # -- signature handling ---------------------------------------------------
+    @staticmethod
+    def _sig_key(dyn: tuple, static_repr: str) -> str:
+        """The entry-table key: flat abstract signature + pytree structure +
+        static-argument values.  One definition — ``__call__``/``lower``/
+        ``prefetch`` must never disagree on it."""
+        return repr((cache_lib.signature_of(dyn),
+                     jax.tree_util.tree_structure(dyn), static_repr))
+
     def _split(self, args: tuple):
         """Split positional args into (dynamic args, closed fn, static repr)."""
         if not self.static_argnums:
@@ -141,32 +184,108 @@ class JitAssembled:
             dt = time.perf_counter() - t0
             self.overlay.stats.traces += 1
             self.overlay.stats.trace_seconds += dt
-            entry = _JitEntry(lowered=lowered, acc=None, trace_seconds=dt)
+            entry = _JitEntry(lowered=lowered, acc=None, trace_seconds=dt,
+                              closed=closed)
             self._entries[key] = entry
         return entry
+
+    def _jit_kwargs(self, args: tuple) -> dict[str, Any] | None:
+        donate = self._donate_leaf_indices(args)
+        return {"donate_argnums": donate} if donate else None
+
+    def _swap(self, entry: _JitEntry, acc, t0: float,
+              handle: DownloadHandle | None) -> None:
+        """Background-download completion: atomically publish the assembled
+        accelerator (``acc is None`` = download cancelled, stale, or
+        failed — clear the pending marker so the next call re-requests)."""
+        if handle is not None and entry.pending is not None \
+                and entry.pending is not handle:
+            # a superseded job's late delivery (e.g. the pre-reconfigure
+            # download, flushed and replaced): the live download owns the
+            # entry — don't clobber its pending marker
+            return
+        if acc is not None:
+            entry.acc = acc
+            # the handle's measured worker time is the download cost; the
+            # submit->delivery wall clock would also bill queue wait
+            entry.assemble_seconds = (handle.seconds if handle is not None
+                                      and handle.seconds > 0.0
+                                      else time.perf_counter() - t0)
+            entry.download_failures = 0
+        elif handle is not None and handle.error is not None:
+            entry.download_failures += 1
+            if entry.download_failures == 1:
+                warnings.warn(
+                    f"background PR download for {self.name!r} failed "
+                    f"({handle.error!r}); serving from the fallback. "
+                    f"Giving up after {_MAX_DOWNLOAD_FAILURES} attempts.",
+                    RuntimeWarning, stacklevel=2)
+        entry.pending = None
+
+    def _submit(self, entry: _JitEntry, *, kind: str = "demand",
+                reclaim: bool = True) -> DownloadHandle | None:
+        """Request this entry's download; bounded retry on compile failure
+        (the fallback keeps serving either way).  After ``overlay.close()``
+        no new downloads start but calls keep being served."""
+        if entry.download_failures >= _MAX_DOWNLOAD_FAILURES:
+            return None
+        if self.overlay.scheduler.closed:
+            return None
+        t0 = time.perf_counter()
+        # clear first: an immediate completion (cached bitstream) delivers
+        # on_done before submit_download returns, and _swap must not mistake
+        # the previous outage's done handle for a live download
+        entry.pending = None
+        handle = self.overlay.submit_download(
+            entry.lowered.graph, fixed=self.fixed,
+            jit_kwargs=entry.jit_kwargs, tile_budget=self.tile_budget,
+            kind=kind, reclaim=reclaim,
+            on_done=lambda acc2, h: self._swap(entry, acc2, t0, h))
+        entry.pending = handle
+        return handle
 
     def _entry(self, args: tuple, *, aot: bool = False,
                _presplit=None) -> _JitEntry:
         dyn, closed, static_repr = _presplit or self._split(args)
-        key = repr((cache_lib.signature_of(dyn),
-                    jax.tree_util.tree_structure(dyn), static_repr))
-        entry = self._traced(key, closed, dyn)
+        entry = self._traced(self._sig_key(dyn, static_repr), closed, dyn)
         acc = entry.acc
         if acc is not None and self.overlay.resident_current(acc):
             # hot path: still resident in the fabric — just bump recency
             self.overlay.fabric.touch(acc.resident_id)
+            self.overlay._note_demand(acc.resident_id)
             return entry
         # first assembly for this signature, or the accelerator was evicted
         # from the fabric since (LRU reclaim / reconfigure): re-place and
         # re-download
-        t0 = time.perf_counter()
-        donate = self._donate_leaf_indices(args)
-        jit_kwargs = {"donate_argnums": donate} if donate else None
-        entry.acc = self.overlay.assemble(entry.lowered.graph, fixed=self.fixed,
-                                          jit_kwargs=jit_kwargs, aot=aot,
-                                          tile_budget=self.tile_budget)
-        entry.assemble_seconds = time.perf_counter() - t0
+        if aot or not self.overlay.async_downloads:
+            t0 = time.perf_counter()
+            entry.jit_kwargs = self._jit_kwargs(args)
+            entry.acc = self.overlay.assemble(entry.lowered.graph,
+                                              fixed=self.fixed,
+                                              jit_kwargs=entry.jit_kwargs,
+                                              aot=aot,
+                                              tile_budget=self.tile_budget)
+            entry.assemble_seconds = time.perf_counter() - t0
+            entry.pending = None
+            return entry
+        # asynchronous pipeline: serve from the fallback.  The download
+        # itself is requested by ``__call__`` *after* the response is
+        # produced (and by :meth:`prefetch`), so a request never contends
+        # with its own download for the CPU/GIL.
         return entry
+
+    def _ensure_download(self, entry: _JitEntry, args: tuple) -> None:
+        """Request the background download once per outage; the scheduler
+        coalesces repeats by residency key."""
+        if entry.pending is not None and not entry.pending.done():
+            # demanded while the download is in flight: keep the resident's
+            # recency honest (handle.key IS the rid) — a hot accelerator
+            # must not look like the LRU victim just because its bitstream
+            # hasn't landed yet
+            self.overlay.fabric.touch(entry.pending.key)
+            return
+        entry.jit_kwargs = self._jit_kwargs(args)
+        self._submit(entry)
 
     # -- public surface -------------------------------------------------------
     def lower(self, *args) -> trace_lib.Lowered:
@@ -174,9 +293,8 @@ class JitAssembled:
         memoized into the entry table (a later ``__call__`` assembles the
         already-traced graph instead of re-tracing)."""
         dyn, closed, static_repr = self._split(args)
-        key = repr((cache_lib.signature_of(dyn),
-                    jax.tree_util.tree_structure(dyn), static_repr))
-        return self._traced(key, closed, dyn).lowered
+        return self._traced(self._sig_key(dyn, static_repr),
+                            closed, dyn).lowered
 
     def accelerator(self, *args) -> interp.AssembledAccelerator:
         """The assembled accelerator for this signature (traces if needed)."""
@@ -188,11 +306,80 @@ class JitAssembled:
         return {"trace_seconds": e.trace_seconds,
                 "assemble_seconds": e.assemble_seconds}
 
+    def prefetch(self, *args) -> DownloadHandle | None:
+        """Hint: download this signature's bitstream before traffic needs it.
+
+        ``args`` may be concrete arrays or ``jax.ShapeDtypeStruct`` pytrees.
+        On an asynchronous overlay the place+compile runs on the scheduler's
+        worker (returns the in-flight :class:`DownloadHandle`); on a
+        synchronous overlay the download is paid eagerly right here (AOT
+        population).  Already-resident signatures are a no-op.
+        """
+        presplit = self._split(args)
+        dyn, closed, static_repr = presplit
+        entry = self._traced(self._sig_key(dyn, static_repr), closed, dyn)
+        ov = self.overlay
+        acc = entry.acc
+        if acc is not None and ov.resident_current(acc):
+            return None                              # already downloaded
+        if not ov.async_downloads:
+            self._entry(args, aot=True, _presplit=presplit)
+            ov.stats.prefetches += 1
+            ov._prefetched.add(entry.acc.resident_id)
+            return None
+        if entry.pending is not None and not entry.pending.done():
+            return entry.pending                     # already on its way
+        entry.jit_kwargs = self._jit_kwargs(args)
+        return self._submit(entry, kind="prefetch")
+
+    def _prefetch_known(self) -> int:
+        """Re-request downloads for every signature this wrapper has seen —
+        the post-``reconfigure()`` warm-up (the flush dropped all residents,
+        but the traced graphs are still in the entry table)."""
+        ov = self.overlay
+        n = 0
+        for entry in list(self._entries.values()):
+            acc = entry.acc
+            if acc is not None and ov.resident_current(acc):
+                continue
+            if not ov.fabric.free():
+                break            # fabric full: warm-up must not reclaim-
+            try:                 # cascade through just-prefetched residents
+                submitted = self._submit(entry, kind="prefetch",
+                                         reclaim=False)
+            except PlacementError:
+                break            # no room for this one ⇒ stop warming
+            if submitted is not None:
+                n += 1
+        return n
+
     def __call__(self, *args):
         presplit = self._split(args)
         entry = self._entry(args, _presplit=presplit)
-        flat = jax.tree.leaves(presplit[0])
-        out = entry.acc.fn(*flat)
+        ov = self.overlay
+        acc = entry.acc
+        if acc is None:
+            # nothing assembled yet: serve the request from the traced
+            # residue function, executed *eagerly* (the paper's "software
+            # fallback while the bitstream downloads").  Eager dispatch
+            # needs no whole-graph compile, so time-to-first-result never
+            # waits on XLA; the download is requested after the response is
+            # computed and the accelerator swaps in underneath.
+            ov.stats.fallback_calls += 1
+            out = entry.closed(*presplit[0])
+            self._ensure_download(entry, args)
+            return out
+        if not ov.resident_current(acc):
+            # mid-re-download: the prior-generation executable lost its PR
+            # regions but is still a correct pure function — keep serving
+            # it while the fabric re-downloads this signature
+            ov.stats.fallback_calls += 1
+            flat = jax.tree.leaves(presplit[0])
+            out = acc.fn(*flat)
+            self._ensure_download(entry, args)
+        else:
+            flat = jax.tree.leaves(presplit[0])
+            out = acc.fn(*flat)
         n_out = len(entry.lowered.graph.output_ids)
         leaves = list(out) if n_out > 1 else [out]
         return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
@@ -217,6 +404,18 @@ class Overlay:
       auto_defragment: re-place surviving residents contiguously after every
         LRU reclaim (costs their bitstreams — moved accelerators re-download
         on next use).
+      async_downloads: run PR downloads (place + eager XLA compile) on a
+        background :class:`~repro.core.scheduler.DownloadScheduler` and serve
+        jit misses from a fallback until the bitstream swaps in.  The default
+        (False) is the deterministic synchronous mode: every miss pays its
+        download on the critical path, exactly the pre-scheduler behavior.
+        Ignored (forced off) when a mesh is given — sharded assembly wraps
+        its own collectives and stays synchronous.
+      download_workers: scheduler worker threads (async mode only).
+      cost_aware_reclaim: reclaim the resident with the best
+        age/re-download-cost ratio instead of pure LRU.  Defaults to
+        following ``async_downloads`` (the pipeline measures real compile
+        seconds; synchronous lazy mode has no meaningful costs to weigh).
     """
 
     def __init__(self, rows: int = 3, cols: int = 3, *,
@@ -225,7 +424,10 @@ class Overlay:
                  mesh: jax.sharding.Mesh | None = None,
                  tile_axis: str = "tiles",
                  cache_capacity: int = 256,
-                 auto_defragment: bool = False) -> None:
+                 auto_defragment: bool = False,
+                 async_downloads: bool = False,
+                 download_workers: int = 1,
+                 cost_aware_reclaim: bool | None = None) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
@@ -233,8 +435,28 @@ class Overlay:
         self.cache = BitstreamCache(cache_capacity)
         self.fabric = Fabric(self.grid)
         self.auto_defragment = auto_defragment
+        self.async_downloads = bool(async_downloads) and mesh is None
+        self.cost_aware_reclaim = (self.async_downloads
+                                   if cost_aware_reclaim is None
+                                   else bool(cost_aware_reclaim))
+        self.scheduler = DownloadScheduler(workers=download_workers)
         self.stats = OverlayStats()
         self._last_placement: Placement | None = None
+        # one lock for all fabric/cache mutation: foreground assemblies and
+        # background download commits serialize on it
+        self._lock = threading.RLock()
+        self._wrappers: "weakref.WeakSet[JitAssembled]" = weakref.WeakSet()
+        self._prefetched: set[str] = set()   # rids downloaded ahead of demand
+
+    # -- async bookkeeping ----------------------------------------------------
+    def _register(self, wrapper: "JitAssembled") -> None:
+        self._wrappers.add(wrapper)
+
+    def _note_demand(self, rid: str) -> None:
+        """First demand access of a prefetched resident = one prefetch hit."""
+        if rid in self._prefetched:
+            self._prefetched.discard(rid)
+            self.stats.prefetch_hits += 1
 
     # -- trace-based frontend -------------------------------------------------
     def jit(self, fn: Callable[..., Any] | None = None, *,
@@ -307,11 +529,12 @@ class Overlay:
     def _place_with_reclaim(self, graph: Graph,
                             fixed: dict[int, Coord] | None,
                             tile_budget: int | None) -> Placement:
-        """Place into free tiles; on pressure, reclaim LRU residents
-        (tiles + bitstreams via the one evict path) until the graph fits or
-        the fabric is empty.  A graph that cannot fit even an *empty*
-        fabric is structurally unplaceable: it re-raises immediately rather
-        than evicting innocent residents first."""
+        """Place into free tiles; on pressure, reclaim residents (tiles +
+        bitstreams via the one evict path) until the graph fits or the
+        fabric is empty.  Victim order is LRU, or age-per-re-download-cost
+        when ``cost_aware_reclaim`` is on.  A graph that cannot fit even an
+        *empty* fabric is structurally unplaceable: it re-raises immediately
+        rather than evicting innocent residents first."""
         probed = False
         while True:
             try:
@@ -319,7 +542,8 @@ class Overlay:
                              occupied=self.fabric.occupied(),
                              max_tiles=tile_budget)
             except PlacementError:
-                victim = self.fabric.lru()
+                victim = self.fabric.reclaim_victim(
+                    cost_aware=self.cost_aware_reclaim)
                 if victim is None:
                     raise
                 if not probed:
@@ -333,6 +557,61 @@ class Overlay:
                 if self.auto_defragment:
                     self.defragment()
 
+    def _bitstream_key(self, graph: Graph, avals: tuple,
+                       placement: Placement,
+                       jit_kwargs: dict[str, Any] | None) -> str:
+        return cache_lib.cache_key(
+            graph.name, cache_lib.signature_of(avals),
+            mesh_desc=str(self.mesh.shape) if self.mesh else "local",
+            placement_desc=repr(sorted(placement.assignment.items())),
+            extra=graph.fingerprint() + repr(sorted((jit_kwargs or {}).items())))
+
+    def _get_or_admit(self, graph: Graph, avals: tuple, rid: str,
+                      fixed: dict[int, Coord] | None,
+                      tile_budget: int | None, *,
+                      reclaim: bool = True) -> ResidentAccelerator:
+        """Resident lookup-or-admission (the actual PR download decision);
+        callers must hold the overlay lock.  ``reclaim=False`` raises
+        :class:`PlacementError` under pressure instead of evicting (hint
+        paths that must not displace live residents)."""
+        resident = self.fabric.get(rid)
+        if resident is not None:
+            self.fabric.touch(rid)
+            return resident
+        if reclaim:
+            placement = self._place_with_reclaim(graph, fixed, tile_budget)
+        else:
+            placement = place(graph, self.grid, self.policy, fixed,
+                              occupied=self.fabric.occupied(),
+                              max_tiles=tile_budget)
+        program = compile_graph(graph, placement)
+        resident = self.fabric.admit(rid, graph.name, graph, placement,
+                                     program, tile_budget=tile_budget,
+                                     fixed=fixed)
+        self.stats.downloads += 1
+        # only a real re-place/download changes the fabric layout; a
+        # resident hit dispatches to tiles already configured
+        if self._last_placement is not None and \
+                placement.assignment != self._last_placement.assignment:
+            self.stats.reconfigurations += 1
+        self._last_placement = placement
+        return resident
+
+    def _base_acc(self, graph: Graph,
+                  resident: ResidentAccelerator) -> interp.AssembledAccelerator:
+        """The un-jitted assembled accelerator for a resident (built once)."""
+        if resident.acc is None:
+            if self.mesh is not None:
+                acc = interp.assemble_sharded(graph, resident.placement,
+                                              self.mesh, self.tile_axis,
+                                              program=resident.program)
+            else:
+                acc = interp.assemble(graph, resident.placement,
+                                      program=resident.program)
+            resident.acc = dataclasses.replace(
+                acc, resident_id=resident.rid, generation=resident.generation)
+        return resident.acc
+
     def assemble(self, graph: Graph, *,
                  fixed: dict[int, Coord] | None = None,
                  jit: bool = True,
@@ -344,94 +623,199 @@ class Overlay:
         If the same graph+signature is already resident this is a pure hit:
         its existing placement (and tiles) are reused and its recency is
         bumped.  Otherwise the graph is placed into the free tiles —
-        reclaiming LRU residents under pressure — and admitted to the
-        fabric as a new resident (a "download").
+        reclaiming residents under pressure — and admitted to the fabric as
+        a new resident (a "download").  This path is synchronous: the
+        download is paid before returning (the asynchronous pipeline lives
+        in :meth:`submit_download`, used by the jit wrappers).
 
         ``aot=True`` lowers AND compiles the executable eagerly (bitstream
         pre-population); otherwise XLA compiles lazily on first call.
         ``tile_budget`` caps the accelerator's footprint (see :meth:`jit`).
         """
-        graph.validate()
-        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
-        rid = self._resident_key(graph, avals, fixed)
+        with self._lock:
+            graph.validate()
+            avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+            rid = self._resident_key(graph, avals, fixed)
 
-        resident = self.fabric.get(rid)
-        if resident is not None:
-            self.fabric.touch(rid)
-            placement, program = resident.placement, resident.program
-            acc = resident.acc        # built once at admission; reusable
+            hit = self.fabric.get(rid) is not None
+            resident = self._get_or_admit(graph, avals, rid, fixed, tile_budget)
+            if hit:
+                self._note_demand(rid)
+            self.stats.assemblies += 1
+            acc = self._base_acc(graph, resident)
+            placement = resident.placement
+
+            if not jit:
+                return acc
+
+            key = self._bitstream_key(graph, avals, placement, jit_kwargs)
+
+            # the BitstreamCache's own LRU may have dropped this resident's
+            # bitstream while it stayed fabric-resident (finite store below
+            # the region count) — recompiling it now is a real re-download;
+            # keep the ledger honest instead of reporting a pure hit
+            if key in resident.cache_keys and key not in self.cache:
+                resident.cache_keys = tuple(k for k in resident.cache_keys
+                                            if k in self.cache)
+                self.stats.downloads += 1
+
+            base = acc
+
+            if aot and self.mesh is None:
+                cached = self.cache.peek(key)
+                if cached is not None and \
+                        not isinstance(cached, jax.stages.Compiled):
+                    # a lazily-jitted entry cannot satisfy the AOT contract
+                    # ("pay the PR download at startup"): drop it so the
+                    # rebuild below eagerly compiles — timed as download cost
+                    self.cache.evict_keys([key])
+
+            if key in self.cache:
+                fn = self.cache.get_or_compile(key, lambda: None)  # pure hit
+                self.fabric.add_cache_key(rid, key)
+                return dataclasses.replace(acc, fn=fn)
+            generation = resident.generation
+        # miss: build OUTSIDE the lock — an AOT compile can run for seconds
+        # and must not stall concurrent requests or background commits
+        t0 = time.perf_counter()
+        if self.mesh is not None:
+            fn = interp.wrap_sharded(base, graph, self.mesh)
+        elif aot:
+            fn = cache_lib.aot_compile(base.fn, avals, jit_kwargs=jit_kwargs)
         else:
-            placement = self._place_with_reclaim(graph, fixed, tile_budget)
-            program = compile_graph(graph, placement)
-            resident = self.fabric.admit(rid, graph.name, graph, placement,
-                                         program, tile_budget=tile_budget,
-                                         fixed=fixed)
-            self.stats.downloads += 1
-            # only a real re-place/download changes the fabric layout; a
-            # resident hit dispatches to tiles already configured
-            if self._last_placement is not None and \
-                    placement.assignment != self._last_placement.assignment:
-                self.stats.reconfigurations += 1
-            self._last_placement = placement
-            acc = None
-        self.stats.assemblies += 1
-
-        if acc is None:
-            if self.mesh is not None:
-                acc = interp.assemble_sharded(graph, placement, self.mesh,
-                                              self.tile_axis, program=program)
-            else:
-                acc = interp.assemble(graph, placement, program=program)
-            acc = dataclasses.replace(acc, resident_id=rid,
-                                      generation=resident.generation)
-            resident.acc = acc
-
-        if not jit:
-            return acc
-
-        key = cache_lib.cache_key(
-            graph.name, cache_lib.signature_of(avals),
-            mesh_desc=str(self.mesh.shape) if self.mesh else "local",
-            placement_desc=repr(sorted(placement.assignment.items())),
-            extra=graph.fingerprint() + repr(sorted((jit_kwargs or {}).items())))
-
-        # the BitstreamCache's own LRU may have dropped this resident's
-        # bitstream while it stayed fabric-resident (finite store below the
-        # region count) — recompiling it now is a real re-download; keep the
-        # ledger honest instead of reporting a pure hit
-        if key in resident.cache_keys and key not in self.cache:
-            resident.cache_keys = tuple(k for k in resident.cache_keys
-                                        if k in self.cache)
-            self.stats.downloads += 1
-
-        base = acc
-
-        if aot and self.mesh is None:
-            cached = self.cache.peek(key)
-            if cached is not None and not isinstance(cached, jax.stages.Compiled):
-                # a lazily-jitted entry cannot satisfy the AOT contract
-                # ("pay the PR download at startup"): drop it so the rebuild
-                # below eagerly compiles — and is timed as download cost
-                self.cache.evict_keys([key])
-
-        def build() -> Callable[..., Any]:
-            if self.mesh is not None:
-                return interp.wrap_sharded(base, graph, self.mesh)
-            if aot:
-                return cache_lib.aot_compile(base.fn, avals)
-            return jax.jit(base.fn, **(jit_kwargs or {}))
-
-        fn = self.cache.get_or_compile(key, build)
-        self.fabric.add_cache_key(rid, key)
+            fn = jax.jit(base.fn, **(jit_kwargs or {}))
+        dt = time.perf_counter() - t0
+        with self._lock:
+            if self.fabric.is_current(rid, generation):
+                self.cache.insert_compiled(key, fn, dt)
+                if aot:
+                    # only eager compiles measure a real download; a lazy
+                    # jax.jit returns in ~0s of scheduling noise (XLA
+                    # compiles at first call) and would pollute the cost
+                    # model with jitter
+                    self.fabric.record_download_cost(rid, dt)
+                self.fabric.add_cache_key(rid, key)
+            # else: the resident was reclaimed while we compiled — don't
+            # publish an orphan bitstream; the executable itself is still a
+            # correct pure function, so the caller keeps it
         return dataclasses.replace(acc, fn=fn)
+
+    # -- asynchronous download pipeline ---------------------------------------
+    def submit_download(self, graph: Graph, *,
+                        fixed: dict[int, Coord] | None = None,
+                        jit_kwargs: dict[str, Any] | None = None,
+                        tile_budget: int | None = None,
+                        on_done: "Callable[[Any, DownloadHandle], None] | None"
+                        = None,
+                        kind: str = "demand",
+                        reclaim: bool = True) -> DownloadHandle:
+        """Begin an asynchronous PR download for ``graph``.
+
+        Foreground (cheap, under the overlay lock): place the graph —
+        reclaiming under pressure — and *admit it immediately*, so the PR
+        regions are held while the bitstream is in flight (the paper's
+        region-allocated-download-pending state) and concurrent placements
+        pack around it.  Background (scheduler worker): the eager XLA
+        compile.  Commit (worker, back under the lock): publish executable +
+        cache entry + measured download cost — but only if the residency
+        ``(rid, generation)`` is still current; a resident evicted or
+        flushed mid-download stays evicted and the late bitstream is
+        dropped.
+
+        ``on_done`` observers receive the final jit-level
+        :class:`~repro.core.interpreter.AssembledAccelerator` (or None).
+        If the bitstream is already downloaded this completes synchronously
+        with an already-done handle.
+        """
+        with self._lock:
+            graph.validate()
+            avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+            rid = self._resident_key(graph, avals, fixed)
+            resident = self._get_or_admit(graph, avals, rid, fixed,
+                                          tile_budget, reclaim=reclaim)
+            base = self._base_acc(graph, resident)
+            key = self._bitstream_key(graph, avals, resident.placement,
+                                      jit_kwargs)
+            if kind == "prefetch":
+                self.stats.prefetches += 1
+                self._prefetched.add(rid)
+
+            exe = self.cache.peek(key)
+            if exe is not None:
+                # bitstream already in the store: no background work needed
+                self.cache.get_or_compile(key, lambda: exe)   # count the hit
+                handle = DownloadHandle(key=rid, kind=kind)
+                handle.result = dataclasses.replace(base, fn=exe)
+                handle.status = "done"
+                handle._event.set()
+                if on_done is not None:
+                    on_done(handle.result, handle)
+                return handle
+
+            pending = _PendingDownload(rid=rid, generation=resident.generation,
+                                       key=key, base=base, avals=avals,
+                                       jit_kwargs=jit_kwargs)
+        return self.scheduler.submit(
+            rid,
+            lambda: self._compile_bitstream(pending),
+            lambda exe, dt: self._commit_download(pending, exe, dt),
+            on_done=on_done, kind=kind)
+
+    def _compile_bitstream(self, pending: _PendingDownload):
+        """The expensive half of a download — eager XLA compile of the
+        assembled accelerator.  Runs on a scheduler worker, no locks held."""
+        return cache_lib.aot_compile(pending.base.fn, pending.avals,
+                                     jit_kwargs=pending.jit_kwargs)
+
+    def _commit_download(self, pending: _PendingDownload, exe,
+                         seconds: float):
+        """Publish a finished background compile — the atomic swap.  Runs on
+        the worker under the overlay lock; a download whose residency was
+        evicted/flushed while compiling must not resurrect it."""
+        with self._lock:
+            if not self.fabric.is_current(pending.rid, pending.generation):
+                self.stats.stale_downloads += 1
+                return None
+            self.cache.insert_compiled(pending.key, exe, seconds)
+            self.fabric.add_cache_key(pending.rid, pending.key)
+            self.fabric.record_download_cost(pending.rid, seconds)
+            return dataclasses.replace(pending.base, fn=exe)
+
+    def prefetch(self, jitted: "JitAssembled", *args) -> DownloadHandle | None:
+        """Engine-level prefetch hint: download ``jitted``'s bitstream for
+        this signature before traffic needs it.  Equivalent to
+        ``jitted.prefetch(*args)``; ``args`` may be concrete arrays or
+        ``jax.ShapeDtypeStruct`` pytrees."""
+        if jitted.overlay is not self:
+            raise ValueError(
+                "jitted wrapper belongs to a different overlay")
+        return jitted.prefetch(*args)
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Wait until no background download is queued or running (and all
+        completion swaps have been delivered)."""
+        return self.scheduler.drain(timeout)
+
+    def close(self) -> None:
+        """End-of-life for the download pipeline: cancel outstanding
+        downloads and retire the scheduler's worker threads.  The overlay
+        itself keeps serving — synchronous paths are unaffected, and async
+        jit misses permanently serve their fallback (no new downloads
+        start).  Optional: idle workers also expire on their own."""
+        self.scheduler.shutdown(wait=True)
 
     # -- explicit PR-region management ----------------------------------------
     def _evict_resident(self, rid: str) -> int:
-        """THE evict path: release a resident's tiles and drop its
-        bitstreams in one motion.  Returns cache entries removed."""
+        """THE evict path: release a resident's tiles, cancel any download
+        still in flight for it, and drop its bitstreams in one motion.
+        Returns cache entries removed."""
         resident = self.fabric.release(rid)
         if resident is None:
             return 0
+        # a queued download never runs; a running one is stripped of its
+        # right to commit (and the generation guard backstops the race)
+        self.scheduler.cancel(rid)
+        self._prefetched.discard(rid)
         self.stats.evictions += 1
         return self.cache.evict_keys(resident.cache_keys)
 
@@ -441,15 +825,17 @@ class Overlay:
 
         Returns the number of cache entries removed.
         """
-        name = target.name if isinstance(target, Graph) else str(target)
-        removed = 0
-        for rid in [r.rid for r in self.fabric.residents.values()
-                    if r.name == name]:
-            removed += self._evict_resident(rid)
-        # sweep bitstreams with no residency record (jit=False assemblies,
-        # pre-eviction leftovers) so evict-by-name stays exhaustive
-        removed += self.cache.evict_prefix(f"{name}:")
-        return removed
+        with self._lock:
+            name = target.name if isinstance(target, Graph) else str(target)
+            removed = 0
+            for rid in [r.rid for r in self.fabric.residents.values()
+                        if r.name == name]:
+                removed += self._evict_resident(rid)
+            # sweep bitstreams with no residency record (jit=False
+            # assemblies, pre-eviction leftovers) so evict-by-name stays
+            # exhaustive
+            removed += self.cache.evict_prefix(f"{name}:")
+            return removed
 
     def defragment(self) -> int:
         """Re-place surviving residents contiguously (most-recently-used
@@ -460,6 +846,10 @@ class Overlay:
         re-download on next use.  All-or-nothing: if any survivor fails to
         re-place, nothing moves.  Returns the number of residents moved.
         """
+        with self._lock:
+            return self._defragment_locked()
+
+    def _defragment_locked(self) -> int:
         survivors = self.fabric.lru_order()[::-1]   # MRU packs first
         plan: list[tuple[ResidentAccelerator, Placement]] = []
         scratch: set[Coord] = set()
@@ -482,6 +872,10 @@ class Overlay:
             if pl.assignment == res.placement.assignment:
                 continue
             self.cache.evict_keys(res.cache_keys)
+            # an in-flight download compiled for the old placement: the
+            # rehome bumps the generation so its commit would be dropped
+            # anyway — cancel it rather than waste the compile
+            self.scheduler.cancel(res.rid)
             self.fabric.rehome(res.rid, pl, compile_graph(res.graph, pl))
             moved += 1
         if moved:
@@ -489,21 +883,39 @@ class Overlay:
         return moved
 
     def reconfigure(self, *, policy: PlacementPolicy | None = None,
-                    large_fraction: float | None = None) -> dict[str, Any]:
+                    large_fraction: float | None = None,
+                    prefetch: bool = True) -> dict[str, Any]:
         """Full-fabric reconfiguration: flush every resident accelerator
         (tiles AND bitstreams; optionally switching placement policy / tile
         mix), so the next assembly re-places and re-downloads from scratch.
-        Cache statistics survive the flush."""
-        if policy is not None:
-            self.policy = policy
-        if large_fraction is not None:
-            self.grid = TileGrid(self.grid.rows, self.grid.cols, large_fraction)
-        # reset() keeps the generation counter monotonic: handles assembled
-        # before the flush must not validate against post-flush re-admissions
-        self.stats.evictions += len(self.fabric.reset(self.grid))
-        self.cache.clear()                        # stats survive the flush
-        self._last_placement = None
-        self.stats.reconfigurations += 1
+        Cache statistics survive the flush.
+
+        In-flight background downloads belong to flushed generations: queued
+        ones are cancelled and running ones lose their right to commit, so a
+        late-arriving bitstream cannot resurrect a flushed resident.  On an
+        asynchronous overlay the flush is followed (unless ``prefetch=False``)
+        by re-requesting downloads for every signature the jit wrappers have
+        seen — the fabric rewarms in the background while fallbacks serve.
+        """
+        with self._lock:
+            # flushed generations may not commit — cancel/stale them first
+            self.scheduler.flush()
+            self._prefetched.clear()
+            if policy is not None:
+                self.policy = policy
+            if large_fraction is not None:
+                self.grid = TileGrid(self.grid.rows, self.grid.cols,
+                                     large_fraction)
+            # reset() keeps the generation counter monotonic: handles
+            # assembled before the flush must not validate against
+            # post-flush re-admissions
+            self.stats.evictions += len(self.fabric.reset(self.grid))
+            self.cache.clear()                    # stats survive the flush
+            self._last_placement = None
+            self.stats.reconfigurations += 1
+            if self.async_downloads and prefetch:
+                for wrapper in list(self._wrappers):
+                    wrapper._prefetch_known()
         return self.describe()
 
     # -- introspection ----------------------------------------------------------
@@ -523,6 +935,13 @@ class Overlay:
             "evictions": self.stats.evictions,
             "reclaims": self.stats.reclaims,
             "defrags": self.stats.defrags,
+            "async_downloads": self.async_downloads,
+            "cost_aware_reclaim": self.cost_aware_reclaim,
+            "prefetches": self.stats.prefetches,
+            "prefetch_hits": self.stats.prefetch_hits,
+            "fallback_calls": self.stats.fallback_calls,
+            "stale_downloads": self.stats.stale_downloads,
+            "scheduler": self.scheduler.describe(),
         }
 
 

@@ -1,0 +1,322 @@
+"""Asynchronous PR-download scheduler.
+
+The paper's dominant runtime cost is the partial-reconfiguration bitstream
+download (~1.25 ms/region, §III).  Our analogue — the XLA compile a
+``BitstreamCache`` miss pays — was previously spent *synchronously on the
+request's critical path*.  :class:`DownloadScheduler` turns that download
+into a pipeline: the expensive work runs on background worker threads while
+the caller keeps serving from a fallback (the traced XLA residue function,
+or a prior-generation executable), and the finished bitstream is swapped in
+atomically by a *commit* callback.
+
+The scheduler is deliberately mechanism-only; policy lives in
+:class:`~repro.core.overlay.Overlay`:
+
+* ``submit(key, work, commit, on_done)`` — enqueue one download.  ``work``
+  runs on a worker thread (the XLA compile; no shared state).  ``commit``
+  runs afterwards, still on the worker, and must itself take the overlay
+  lock and validate residency (``Fabric.is_current``) before publishing —
+  the scheduler treats a ``None``/falsy commit result as *stale* and counts
+  it dropped.  ``on_done`` observers receive the committed value (or None).
+* submissions **coalesce** by key: a second submit while the first is
+  queued/running attaches its observer instead of downloading twice.
+* ``cancel(key)`` — a queued job never runs; a running job loses its right
+  to commit (marked stale).  ``flush()`` does this for every key — the
+  reconfigure/evict path, so a late-arriving bitstream cannot resurrect an
+  evicted resident.
+* ``drain()`` — barrier: wait until nothing is queued or running (tests,
+  benchmarks, deterministic shutdown).
+
+Worker threads are daemonic and started lazily on first submit, so a
+synchronous overlay never spawns a thread.
+"""
+
+from __future__ import annotations
+
+import atexit
+import collections
+import dataclasses
+import os
+import threading
+import time
+import weakref
+from typing import Any, Callable
+
+__all__ = ["DownloadHandle", "DownloadScheduler", "SchedulerStats"]
+
+# every live scheduler, so interpreter exit can wait out in-flight compiles:
+# CPython kills daemon threads abruptly, and a worker killed inside an XLA
+# compile takes the whole process down with std::terminate (SIGABRT)
+_LIVE_SCHEDULERS: "weakref.WeakSet[DownloadScheduler]" = weakref.WeakSet()
+
+
+@atexit.register
+def _shutdown_all_schedulers() -> None:   # pragma: no cover - exit hook
+    for sched in list(_LIVE_SCHEDULERS):
+        try:
+            sched.shutdown(wait=True)
+        except Exception:
+            pass
+
+# job lifecycle: QUEUED -> RUNNING -> DONE
+#                   \-> CANCELLED  (dequeued before running)
+#         RUNNING jobs hit by cancel/flush commit as stale -> DONE(dropped)
+_QUEUED, _RUNNING, _DONE, _CANCELLED = "queued", "running", "done", "cancelled"
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0        # jobs enqueued (first submit per key)
+    coalesced: int = 0        # submits folded into an in-flight job
+    completed: int = 0        # work() finished and commit accepted the result
+    dropped_stale: int = 0    # work() finished but commit refused (flushed gen)
+    cancelled: int = 0        # dequeued before running
+    failed: int = 0           # work() raised
+    download_seconds: float = 0.0   # total background work time
+
+
+@dataclasses.dataclass
+class DownloadHandle:
+    """Observer handle for one submitted download."""
+
+    key: str
+    kind: str = "demand"
+    _event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Any = None        # committed value, or None (cancelled/stale/failed)
+    error: BaseException | None = None
+    status: str = _QUEUED
+    seconds: float = 0.0      # measured background work time (the download)
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._event.wait(timeout)
+
+
+class _Job:
+    __slots__ = ("key", "work", "commit", "handles", "state", "stale")
+
+    def __init__(self, key: str, work: Callable[[], Any],
+                 commit: Callable[[Any, float], Any]) -> None:
+        self.key = key
+        self.work = work
+        self.commit = commit
+        self.handles: list[
+            tuple[DownloadHandle,
+                  "Callable[[Any, DownloadHandle], None] | None"]] = []
+        self.state = _QUEUED
+        self.stale = False     # cancel()/flush() hit it while running
+
+
+class DownloadScheduler:
+    """Background pipeline for PR-bitstream downloads (place+compile)."""
+
+    def __init__(self, workers: int = 1, name: str = "pr-download",
+                 idle_timeout: float = 30.0) -> None:
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.workers = workers
+        self.name = name
+        self.idle_timeout = idle_timeout      # idle workers expire (no leak
+        self.stats = SchedulerStats()         # from abandoned overlays)
+        self._cond = threading.Condition()
+        self._queue: collections.deque[_Job] = collections.deque()
+        self._jobs: dict[str, _Job] = {}      # queued or running, by key
+        self._finishing = 0                   # jobs delivering observer calls
+        self._threads: list[threading.Thread] = []
+        self._shutdown = False
+        _LIVE_SCHEDULERS.add(self)
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, key: str, work: Callable[[], Any],
+               commit: Callable[[Any, float], Any], *,
+               on_done: "Callable[[Any, DownloadHandle], None] | None" = None,
+               kind: str = "demand") -> DownloadHandle:
+        """Enqueue ``work`` (worker thread) followed by ``commit`` (same
+        thread; must validate + publish).  Same-key submits while the first
+        is in flight coalesce onto it.  ``on_done`` observers are invoked as
+        ``on_done(result, handle)`` — the handle carries error/timing, so an
+        observer can distinguish a failed download from a stale one."""
+        handle = DownloadHandle(key=key, kind=kind)
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("scheduler is shut down")
+            job = self._jobs.get(key)
+            if job is not None and not job.stale:
+                job.handles.append((handle, on_done))
+                handle.status = job.state
+                self.stats.coalesced += 1
+                return handle
+            job = _Job(key, work, commit)
+            job.handles.append((handle, on_done))
+            self._jobs[key] = job
+            self._queue.append(job)
+            self.stats.submitted += 1
+            self._ensure_workers()
+            self._cond.notify()
+        return handle
+
+    def _ensure_workers(self) -> None:
+        # called under the lock; lazily grow to the configured worker count
+        self._threads = [t for t in self._threads if t.is_alive()]
+        while len(self._threads) < self.workers:
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"{self.name}-{len(self._threads)}",
+                                 daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    # -- cancellation ---------------------------------------------------------
+    def cancel(self, key: str) -> bool:
+        """Stop ``key``'s download: unqueue it, or strip a running job of its
+        right to commit.  Returns True if a job was affected."""
+        finished: _Job | None = None
+        with self._cond:
+            job = self._jobs.get(key)
+            if job is None:
+                return False
+            job.stale = True
+            if job.state == _QUEUED:
+                try:
+                    self._queue.remove(job)
+                except ValueError:      # pragma: no cover - already popped
+                    pass
+                else:
+                    job.state = _CANCELLED
+                    del self._jobs[key]
+                    self.stats.cancelled += 1
+                    self._finishing += 1
+                    finished = job
+        if finished is not None:
+            try:
+                self._finish(finished, None, _CANCELLED)
+            finally:
+                with self._cond:
+                    self._finishing -= 1
+                    self._cond.notify_all()
+        return True
+
+    def flush(self) -> int:
+        """Cancel every queued download and mark every running one stale —
+        the full-fabric reconfigure path.  Returns jobs affected."""
+        with self._cond:
+            keys = list(self._jobs)
+        return sum(1 for k in keys if self.cancel(k))
+
+    # -- synchronization ------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._shutdown
+
+    def outstanding(self) -> int:
+        with self._cond:
+            return len(self._jobs)
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until no download is queued, running, or mid-delivery —
+        when this returns True every observer (swap) callback has run."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._jobs or self._finishing:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                self._cond.wait(remaining if remaining is not None else 0.5)
+            return True
+
+    def shutdown(self, *, wait: bool = True) -> None:
+        self.flush()
+        if wait:
+            self.drain(timeout=30.0)
+        with self._cond:
+            self._shutdown = True
+            self._cond.notify_all()
+
+    # -- worker ---------------------------------------------------------------
+    def _worker_loop(self) -> None:
+        try:
+            # background QoS: a bitstream compile must not steal CPU from
+            # the request being served by the fallback (Linux allows
+            # per-thread niceness through PRIO_PROCESS + native thread id)
+            os.setpriority(os.PRIO_PROCESS, threading.get_native_id(), 10)
+        except (AttributeError, OSError):        # pragma: no cover - platform
+            pass
+        while True:
+            with self._cond:
+                deadline = time.monotonic() + self.idle_timeout
+                while not self._queue and not self._shutdown:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        # idle expiry: abandoned overlays must not pin a
+                        # thread forever; submit() respawns on demand
+                        try:
+                            self._threads.remove(threading.current_thread())
+                        except ValueError:   # pragma: no cover
+                            pass
+                        return
+                    self._cond.wait(remaining)
+                if self._shutdown and not self._queue:
+                    return
+                job = self._queue.popleft()
+                job.state = _RUNNING
+                for handle, _ in job.handles:
+                    handle.status = _RUNNING
+            self._run_job(job)
+
+    def _run_job(self, job: _Job) -> None:
+        result, error = None, None
+        t0 = time.perf_counter()
+        try:
+            raw = job.work()
+            # commit validates (overlay lock + Fabric.is_current) and
+            # publishes; a stale job forfeits its commit entirely
+            result = None if job.stale else job.commit(raw, time.perf_counter() - t0)
+        except BaseException as exc:   # noqa: BLE001 - reported via handle
+            error = exc
+        dt = time.perf_counter() - t0
+        for handle, _ in job.handles:
+            handle.seconds = dt
+        with self._cond:
+            self.stats.download_seconds += dt
+            if error is not None:
+                self.stats.failed += 1
+            elif result is None:
+                self.stats.dropped_stale += 1
+            else:
+                self.stats.completed += 1
+            job.state = _DONE
+            if self._jobs.get(job.key) is job:
+                del self._jobs[job.key]
+            # the job is no longer "outstanding" but its observers haven't
+            # run: keep drain() blocked until _finish delivers the swap
+            self._finishing += 1
+        try:
+            self._finish(job, result, _DONE, error)
+        finally:
+            with self._cond:
+                self._finishing -= 1
+                self._cond.notify_all()
+
+    def _finish(self, job: _Job, result: Any, status: str,
+                error: BaseException | None = None) -> None:
+        # runs OUTSIDE the scheduler lock: observers may take the overlay
+        # lock, which foreground threads hold while calling cancel()/flush()
+        for handle, on_done in job.handles:
+            handle.result = result
+            handle.error = error
+            handle.status = status
+            handle._event.set()
+            if on_done is not None:
+                try:
+                    on_done(result, handle)
+                except Exception:       # pragma: no cover - observer bug
+                    pass
+
+    def describe(self) -> dict[str, Any]:
+        with self._cond:
+            return {"outstanding": len(self._jobs),
+                    "workers": len([t for t in self._threads if t.is_alive()]),
+                    **dataclasses.asdict(self.stats)}

@@ -128,6 +128,12 @@ class _Lowering:
             return self.g.const(atom.val, name="lit")
         return NodeRef(self.g, env[atom])
 
+    def _set_aval(self, node_id: int, aval) -> None:
+        # record the jaxpr-known output aval so the finished graph can
+        # seal_shapes() instead of re-deriving every node via eval_shape
+        self.g.nodes[node_id].aval = jax.ShapeDtypeStruct(aval.shape,
+                                                          aval.dtype)
+
     def lower_eqns(self, env: dict, eqns) -> None:
         for eqn in eqns:
             prim = eqn.primitive.name
@@ -136,8 +142,9 @@ class _Lowering:
 
             # 1. speculative branch (C4): select_n(pred, on_false, on_true)
             if prim == "select_n" and len(refs) == 3 and len(eqn.outvars) == 1:
-                env[eqn.outvars[0]] = self.g.select(
-                    refs[0], refs[2], refs[1]).node_id
+                nid = self.g.select(refs[0], refs[2], refs[1]).node_id
+                self._set_aval(nid, eqn.outvars[0].aval)
+                env[eqn.outvars[0]] = nid
                 continue
 
             # 2. call primitives: registered Pallas bitstream, or inline
@@ -155,8 +162,9 @@ class _Lowering:
                     node_op = dataclasses.replace(
                         res, name=op.name, fn=fn, tile_class=op.tile_class,
                         flops_per_elem=op.flops_per_elem)
-                    env[eqn.outvars[0]] = self.g.apply(
-                        node_op, *refs).node_id
+                    nid = self.g.apply(node_op, *refs).node_id
+                    self._set_aval(nid, eqn.outvars[0].aval)
+                    env[eqn.outvars[0]] = nid
                     continue
                 if len(sub.jaxpr.invars) == len(refs):
                     inner: dict = {}
@@ -177,7 +185,9 @@ class _Lowering:
             op = rule(in_avals, eqn.params) if rule is not None else None
             if (op is not None and op.arity == len(refs)
                     and len(eqn.outvars) == 1):
-                env[eqn.outvars[0]] = self.g.apply(op, *refs).node_id
+                nid = self.g.apply(op, *refs).node_id
+                self._set_aval(nid, eqn.outvars[0].aval)
+                env[eqn.outvars[0]] = nid
                 continue
 
             # 4. unmapped: strict error or fused-XLA residue
@@ -191,11 +201,19 @@ class _Lowering:
             self.unmapped.append(prim)
             node = self.g.apply(_residue_operator(eqn), *refs)
             if eqn.primitive.multiple_results:
+                # tuple-valued residue node: its aval is the tuple of all
+                # result avals (what the re-bound primitive returns)
+                self.g.nodes[node.node_id].aval = tuple(
+                    jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                    for v in eqn.outvars)
                 for i, outvar in enumerate(eqn.outvars):
                     if isinstance(outvar, jcore.DropVar):
                         continue
-                    env[outvar] = self.g.apply(_projection(i), node).node_id
+                    pid = self.g.apply(_projection(i), node).node_id
+                    self._set_aval(pid, outvar.aval)
+                    env[outvar] = pid
             else:
+                self._set_aval(node.node_id, eqn.outvars[0].aval)
                 env[eqn.outvars[0]] = node.node_id
 
 
@@ -230,6 +248,10 @@ def trace_to_graph(fn: Callable[..., Any], *args, name: str | None = None,
 
     lowering.lower_eqns(env, closed.jaxpr.eqns)
     g.output(*[lowering._ref(env, v) for v in closed.jaxpr.outvars])
+    # every node carries its jaxpr-known aval: skip the eval_shape sweep
+    # (validate() on multi-hundred-node traced model graphs was costing
+    # ~1 ms/node on the assembly critical path)
+    g.seal_shapes()
 
     return Lowered(graph=g, in_tree=in_tree, out_tree=out_tree,
                    in_avals=tuple(v.aval for v in closed.jaxpr.invars),

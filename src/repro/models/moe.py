@@ -25,6 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro import sharding as shd
 from repro.configs.base import ArchConfig
 from repro.models import params as pm
@@ -157,7 +158,7 @@ def moe_fwd_ep(p: dict, x: jax.Array, cfg: ArchConfig, mesh,
             aux = jax.lax.pmean(aux, model_ax)
         return y, aux
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(), w_spec, w_spec, w_down_spec, P(batch_ax, None)),
         out_specs=(P(batch_ax, None), P()),

@@ -18,6 +18,13 @@ prompt-length variants can co-reside), and held in the overlay's bitstream
 cache.  This is the paper's multi-accelerator fabric: decode stays hot
 (touched every tick) while cold prefill variants are the first reclaimed
 under placement pressure.
+
+On an overlay with ``async_downloads=True`` the engine also overlaps the
+two downloads: the moment the first prefill starts (the earliest point the
+decode-step shapes are known), it *prefetches* the decode accelerator, so
+decode's bitstream compiles on the scheduler worker while prefill tokens
+stream — by the first decode tick the swap has usually landed and no tick
+ever blocks on a compile.
 """
 
 from __future__ import annotations
@@ -74,6 +81,17 @@ class ServeEngine:
             self._decode = jax.jit(step)
             self._prefill = jax.jit(pf)
         self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
+        self._decode_prefetched = False
+
+    def _prefetch_decode(self) -> None:
+        """Hide the decode download behind prefill: request it once, as soon
+        as traffic arrives (async overlays only — on a synchronous overlay
+        the first decode tick pays its download as before)."""
+        if self._decode_prefetched or self.overlay is None or \
+                not getattr(self.overlay, "async_downloads", False):
+            return
+        self._decode_prefetched = True
+        self._decode.prefetch(self.params, self.cur_tokens, self.caches)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -90,6 +108,7 @@ class ServeEngine:
         """Prefill a single slot: run the prompt with a batch-1 cache, then
         scatter the stripe into the pooled cache."""
         cfg = self.cfg
+        self._prefetch_decode()      # decode bitstream downloads during prefill
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         c1 = mdl.init_cache(cfg, 1, self.max_len)
         logits, c1 = self._prefill(self.params, prompt, c1)

@@ -48,6 +48,7 @@ def test_compressed_psum_across_pods():
     out = run_with_devices(4, """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.optim.compression import quantize, dequantize
 
         mesh = jax.make_mesh((4,), ("pod",))
@@ -63,9 +64,9 @@ def test_compressed_psum_across_pods():
             deq = jax.lax.psum(q["g"].astype(jnp.float32) * s["g"], "pod")
             return deq / 4.0
 
-        fn = jax.jit(jax.shard_map(reduce_compressed, mesh=mesh,
-                                   in_specs=P("pod"), out_specs=P(),
-                                   check_vma=False))
+        fn = jax.jit(shard_map(reduce_compressed, mesh=mesh,
+                               in_specs=P("pod"), out_specs=P(),
+                               check_vma=False))
         with mesh:
             mean_c = fn(g).reshape(-1)   # shard_map keeps the local rank
         mean_t = jnp.mean(g, axis=0)

@@ -11,6 +11,7 @@ Covers the invariants the dry-run relies on:
 
 import json
 import os
+import re
 import subprocess
 import sys
 import textwrap
@@ -22,8 +23,13 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def run_with_devices(n: int, code: str, timeout: int = 420) -> str:
     env = dict(os.environ)
+    # drop any inherited device-count flag (e.g. the CI lane's =8): the last
+    # occurrence wins in XLA's flag parsing, so an inherited value would
+    # silently override the count this test asked for
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
-                        + env.get("XLA_FLAGS", ""))
+                        + inherited)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, env=env,
