@@ -18,9 +18,9 @@ from repro.configs.archs import PAPER_VECTOR_LEN
 from repro.core import Overlay, branchy_graph
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     rows = []
-    n = PAPER_VECTOR_LEN
+    n = 256 if smoke else PAPER_VECTOR_LEN
     x = jax.random.normal(jax.random.PRNGKey(0), (n,))
 
     # overlay speculative assembly (both arms + SELECT)
@@ -46,4 +46,5 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    from benchmarks.common import bench_cli
+    bench_cli(main)

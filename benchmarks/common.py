@@ -22,3 +22,29 @@ def time_call(fn, *args, warmup: int = 3, iters: int = 20) -> float:
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def bench_cli(main) -> None:
+    """Standard benchmark entry point: ``python -m benchmarks.X [--smoke]``.
+
+    ``--smoke`` runs the benchmark at tiny sizes — numbers are meaningless
+    but every code path executes, so CI can keep benches from rotting
+    between perf PRs."""
+    import argparse
+
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(smoke=args.smoke):
+        print(line)
+    # hard-exit: lingering daemon threads (async download workers, XLA
+    # pools) can SIGABRT during interpreter teardown after a fully
+    # successful run — don't let that turn a green benchmark red
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(0)

@@ -41,22 +41,26 @@ from benchmarks.common import row
 from repro.core import Overlay
 
 
-def _workload(x, w):
+def _make_workload(depth: int):
     # a deep chain of few distinct primitives: the assembled program's XLA
     # compile scales with the chain length, while the fallback is pure
     # op-by-op dispatch — the compile-cost gap the pipeline hides.
     # (bounded magnitudes: sqrt((a*w)^2 + c) stays O(sqrt(c)) for |w|<=1.1)
-    acc = x
-    for i in range(160):
-        acc = jnp.sqrt((acc * w) ** 2 + float(i + 1))
-    return jnp.sum(acc * w)
+    def _workload(x, w):
+        acc = x
+        for i in range(depth):
+            acc = jnp.sqrt((acc * w) ** 2 + float(i + 1))
+        return jnp.sum(acc * w)
+
+    return _workload
 
 
-def time_to_first_result() -> list[str]:
+def time_to_first_result(smoke: bool = False) -> list[str]:
     rows = []
     # compile cost is shape-independent; a small vector keeps the fallback's
     # actual compute out of the comparison's denominator
-    n = 8192
+    n = 512 if smoke else 8192
+    _workload = _make_workload(16 if smoke else 160)
     x = jax.random.uniform(jax.random.PRNGKey(0), (n,), minval=0.5,
                            maxval=1.5)
     w = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=0.9,
@@ -73,7 +77,7 @@ def time_to_first_result() -> list[str]:
     first_async = swapped = None
     swapped_us = 0.0
     asyn = None
-    for _ in range(3):
+    for _ in range(1 if smoke else 3):
         sync = Overlay(3, 3)
         jit_sync = sync.jit(_workload, name="pipeline")
         t0 = time.perf_counter()
@@ -110,9 +114,10 @@ def time_to_first_result() -> list[str]:
     return rows
 
 
-def churn_tail_latency() -> list[str]:
+def churn_tail_latency(smoke: bool = False) -> list[str]:
     rows = []
-    n = 4096
+    n = 256 if smoke else 4096
+    rounds = 3 if smoke else 12
     x = jnp.linspace(0.0, 1.0, n)
 
     def make_fns(ov):
@@ -121,7 +126,7 @@ def churn_tail_latency() -> list[str]:
         return [ov.jit((lambda s: lambda v: v * s + s)(float(i + 2)),
                        name=f"churn{i}") for i in range(3)]
 
-    def drive(ov, fns, rounds=12):
+    def drive(ov, fns, rounds=rounds):
         lat = []
         for _ in range(rounds):
             for fn in fns:
@@ -150,9 +155,10 @@ def churn_tail_latency() -> list[str]:
     return rows
 
 
-def main() -> list[str]:
-    return time_to_first_result() + churn_tail_latency()
+def main(smoke: bool = False) -> list[str]:
+    return time_to_first_result(smoke) + churn_tail_latency(smoke)
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    from benchmarks.common import bench_cli
+    bench_cli(main)

@@ -156,8 +156,13 @@ def run_sharded_subprocess() -> list[str]:
     return lines
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     rows = []
+    if smoke:
+        # tiny single-process pass: every local code path executes, the
+        # heavy 9-device sharded subprocess is skipped (tests cover it)
+        r, _, _ = bench_size(1024, "smoke")
+        return r
     # the paper's exact data size (16 KB): pass-through cost is sub-µs on a
     # CPU cache, so this point reproduces the SETUP but not the separation
     r, _, _ = bench_size(PAPER_VECTOR_LEN, "16KB_paper")
@@ -185,4 +190,5 @@ if __name__ == "__main__":
     if os.environ.get("REPRO_FIG3_SHARDED") == "1":
         sharded_main()
     else:
-        print("\n".join(main()))
+        from benchmarks.common import bench_cli
+        bench_cli(main)

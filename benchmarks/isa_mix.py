@@ -36,15 +36,16 @@ def traced_graphs(n: int) -> list:
             trace_to_graph(branchy, sds, name="traced_branchy").graph]
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
+    n = 128 if smoke else 4096
     rows = []
     rows.append(row("isa/total_opcodes", float(len(Opcode)), "paper=42"))
     rows.append(row("isa/registered_primitives",
                     float(len(patterns.registered_primitives())),
                     "trace_frontend_dispatch"))
 
-    graphs = ([vmul_reduce_graph(4096), saxpy_graph(4096), branchy_graph(4096)]
-              + traced_graphs(4096))
+    graphs = ([vmul_reduce_graph(n), saxpy_graph(n), branchy_graph(n)]
+              + traced_graphs(n))
     for g in graphs:
         for policy in (PlacementPolicy.DYNAMIC, PlacementPolicy.STATIC):
             pl = place(g, TileGrid(3, 3), policy)
@@ -55,13 +56,13 @@ def main() -> list[str]:
                             float(len(prog)), derived))
 
     # eager interpretation throughput (instructions/sec)
-    g = vmul_reduce_graph(4096)
+    g = vmul_reduce_graph(n)
     pl = place(g, TileGrid(3, 3), PlacementPolicy.DYNAMIC)
     prog = compile_graph(g, pl)
-    a = jax.random.normal(jax.random.PRNGKey(0), (4096,))
-    b = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    a = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
     run_program(prog, g, (a, b))  # warm
-    iters = 50
+    iters = 5 if smoke else 50
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(run_program(prog, g, (a, b)))
@@ -73,4 +74,5 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    from benchmarks.common import bench_cli
+    bench_cli(main)

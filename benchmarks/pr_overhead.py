@@ -27,9 +27,9 @@ from repro.configs.archs import PAPER_PR_OVERHEAD_MS, PAPER_VECTOR_LEN
 from repro.core import Overlay
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     rows = []
-    n = PAPER_VECTOR_LEN
+    n = 256 if smoke else PAPER_VECTOR_LEN
     a = jax.random.normal(jax.random.PRNGKey(0), (n,))
     b = jax.random.normal(jax.random.PRNGKey(1), (n,))
 
@@ -97,4 +97,5 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    from benchmarks.common import bench_cli
+    bench_cli(main)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -30,19 +31,24 @@ def main(argv: list[str] | None = None) -> None:
                     metavar="PATH",
                     help="also write results as JSON (default "
                          "BENCH_<timestamp>.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size smoke mode: every benchmark's code paths "
+                         "execute in seconds (CI rot guard); numbers are "
+                         "meaningless")
     args = ap.parse_args(argv)
 
     from benchmarks import (branch_speculation, download_pipeline,
                             fig3_vmul_reduce, isa_mix, pr_overhead,
-                            residency_churn, tile_granularity)
+                            relocation, residency_churn, tile_granularity)
     modules = [fig3_vmul_reduce, pr_overhead, download_pipeline, isa_mix,
-               tile_granularity, branch_speculation, residency_churn]
+               tile_granularity, branch_speculation, residency_churn,
+               relocation]
     print("name,us_per_call,derived")
     rows: list[str] = []
     failed = 0
     for mod in modules:
         try:
-            for line in mod.main():
+            for line in mod.main(smoke=args.smoke):
                 print(line)
                 rows.append(line)
         except Exception:
@@ -64,8 +70,12 @@ def main(argv: list[str] | None = None) -> None:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {path}", file=sys.stderr)
 
-    if failed:
-        sys.exit(1)
+    # hard-exit: CPython teardown of lingering daemon threads (scheduler
+    # workers, XLA pools) can SIGABRT after all output is done, which would
+    # flake the CI bench-smoke gate on a run that actually succeeded
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(1 if failed else 0)
 
 
 if __name__ == "__main__":

@@ -30,9 +30,9 @@ def transcendental_graph(n: int = 1024) -> Graph:
     return g
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     rows = []
-    g = transcendental_graph()
+    g = transcendental_graph(64 if smoke else 1024)
     n_large_ops = sum(1 for node in g.op_nodes()
                       if node.op is not None
                       and node.op.tile_class is patterns.TileClass.LARGE)
@@ -52,4 +52,5 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    from benchmarks.common import bench_cli
+    bench_cli(main)

@@ -99,6 +99,26 @@ def main():
     print(f"aot cache    : {aot_overlay.describe()['cache']} "
           f"(serve-time assembly was a pure hit)")
 
+    # 5. relocatable bitstreams: residents move without re-downloading -----
+    # evicting the front tenant opens a hole; defragment() compacts the
+    # survivor by RELOCATION — the compiled kernel is placement-free, so
+    # the move re-emits only the route program (no cache churn, identical
+    # numerics).  See DESIGN.md §6 and benchmarks/relocation.py.
+    reloc = Overlay(2, 2, large_fraction=0.0)
+    front = reloc.jit(lambda x: x * 2.0 + 1.0, name="front")
+    back = reloc.jit(lambda x: x * 3.0 - 1.0, name="back")
+    x_small = sig[:64]
+    front(x_small)                           # tiles (0,0),(0,1)
+    y0 = back(x_small)                       # tiles (1,0),(1,1)
+    insertions = reloc.cache.stats.insertions
+    reloc.evict("front")                     # hole at the front
+    moved = reloc.defragment()
+    y1 = back(x_small)                       # cheap rebind, not a re-download
+    d = reloc.describe()
+    print(f"relocation   : moved={moved} relocations={d['relocations']} "
+          f"kernel_insertions={reloc.cache.stats.insertions - insertions} "
+          f"bit_identical={bool(jnp.all(y0 == y1))}")
+
 
 if __name__ == "__main__":
     main()

@@ -15,18 +15,23 @@ Public API (frontend first — the paper's programming model):
   scheduler.DownloadScheduler                 — async PR-download pipeline
 """
 
-from repro.core.cache import BitstreamCache, aot_compile, cache_key, signature_of
+from repro.core.cache import (BitstreamCache, aot_compile, cache_key,
+                              kernel_jit_kwargs, kernel_key, signature_of)
 from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
 from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_graph
 from repro.core.interpreter import (AssembledAccelerator, assemble,
-                                    assemble_sharded, run_program, wrap_sharded)
-from repro.core.isa import Instruction, Opcode, Program, compile_graph
+                                    assemble_sharded, bind_routes,
+                                    build_kernel, route_vector, run_program,
+                                    wrap_sharded, wrap_sharded_kernel)
+from repro.core.isa import (Instruction, Opcode, Program, compile_compute,
+                            compile_graph, compile_routes)
 from repro.core.overlay import (JitAssembled, Overlay, default_overlay,
                                 jit_assemble)
 from repro.core.patterns import (LIBRARY, Operator, TileClass, register_call,
                                  register_op)
 from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
-                                  TileGrid, place, place_dynamic, place_static)
+                                  TileGrid, check_assignment, place,
+                                  place_dynamic, place_static)
 from repro.core.scheduler import DownloadHandle, DownloadScheduler
 from repro.core.trace import Lowered, TraceError, trace_to_graph
 
@@ -38,8 +43,12 @@ __all__ = [
     "Placement", "PlacementError", "PlacementPolicy", "Program",
     "ResidentAccelerator", "TileClass",
     "TileGrid", "TraceError", "aot_compile", "assemble", "assemble_sharded",
-    "branchy_graph", "cache_key", "compile_graph", "default_overlay",
-    "jit_assemble", "place", "place_dynamic", "place_static", "register_call",
-    "register_op", "run_program", "saxpy_graph", "signature_of",
+    "bind_routes", "branchy_graph", "build_kernel", "cache_key",
+    "check_assignment", "compile_compute", "compile_graph", "compile_routes",
+    "default_overlay",
+    "jit_assemble", "kernel_jit_kwargs", "kernel_key", "place",
+    "place_dynamic", "place_static", "register_call", "register_op",
+    "route_vector", "run_program", "saxpy_graph", "signature_of",
     "trace_to_graph", "vmul_reduce_graph", "wrap_sharded",
+    "wrap_sharded_kernel",
 ]

@@ -1,4 +1,4 @@
-"""BitstreamCache — the compiled-artifact cache (PR-download analogue).
+"""BitstreamCache — the two-level compiled-artifact cache (PR analogue).
 
 The paper's PR regions take ~1.25 ms per bitstream download, "only incurred at
 startup or initial configuration" (§III, C3).  The TPU analogue of a
@@ -10,9 +10,17 @@ facts measurable:
 * ``hits``                          — reuse of already-downloaded bitstreams,
 * LRU eviction with a capacity     — finite PR-region real estate.
 
-Keys must capture everything that shapes the executable: operator identity,
-abstract input signature, mesh topology, and placement — two placements of the
-same graph are *different bitstreams* (they route differently).
+The store is **two-level**, mirroring the paper's relocatable pre-synthesized
+bitstreams:
+
+1. **Kernel artifacts** (the expensive level): compiled executables keyed by
+   :func:`kernel_key` — (operator identity, abstract input signature, mesh
+   topology, graph fingerprint), *placement-free*.  One artifact serves every
+   placement of a graph; it takes the per-edge ``routes`` vector as its first
+   runtime argument (``interpreter.build_kernel``).
+2. **Route programs** (the cheap level): per-placement hop vectors held in a
+   side table (:meth:`BitstreamCache.route_program`) and re-emitted in
+   microseconds whenever a resident relocates — never worth a download.
 """
 
 from __future__ import annotations
@@ -44,6 +52,38 @@ def cache_key(name: str, signature: tuple, mesh_desc: str = "",
     return f"{name}:{h}"
 
 
+def kernel_key(name: str, signature: tuple, mesh_desc: str = "",
+               fingerprint: str = "", extra: str = "") -> str:
+    """Placement-free identity of a compiled kernel artifact: (graph name,
+    input signature, mesh topology, graph content fingerprint).  Two
+    placements of one graph share ONE kernel — relocation never recompiles."""
+    h = hashlib.sha256(
+        repr((name, signature, mesh_desc, fingerprint, extra)).encode()
+    ).hexdigest()[:16]
+    return f"{name}:{h}"
+
+
+def kernel_jit_kwargs(jit_kwargs: "dict[str, Any] | None") -> dict[str, Any]:
+    """Translate user-level jit kwargs to kernel calling convention: the
+    kernel's argument 0 is the routes vector, so positional argnum indices
+    (donate_argnums / static_argnums) shift by one — routes are never
+    donated or static.  Accepts the int or iterable forms ``jax.jit`` does,
+    including index 0.  Name-based forms (``*_argnames``) cannot map onto
+    the ``kernel(routes, *inputs)`` signature and are rejected."""
+    kw = dict(jit_kwargs or {})
+    for field in ("donate_argnums", "static_argnums"):
+        v = kw.get(field)
+        if v is not None:
+            if isinstance(v, int):
+                v = (v,)
+            kw[field] = tuple(i + 1 for i in v)
+    if kw.get("donate_argnames") or kw.get("static_argnames"):
+        raise ValueError(
+            "jit_kwargs *_argnames are not supported on kernel artifacts — "
+            "use positional *_argnums")
+    return kw
+
+
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
@@ -58,15 +98,28 @@ class CacheStats:
         return self.hits / total if total else 0.0
 
 
+@dataclasses.dataclass
+class RouteStats:
+    """Accounting for the cheap level: per-placement route programs."""
+
+    emitted: int = 0               # route programs built (one per placement)
+    hits: int = 0                  # placements served by an existing program
+    emit_seconds: float = 0.0      # total route-emission time (sub-ms each)
+
+
 class BitstreamCache:
-    """LRU cache of compiled executables keyed by (op, signature, mesh, placement)."""
+    """Two-level store: LRU of placement-free compiled kernel artifacts
+    (keyed by :func:`kernel_key`) plus a side table of per-placement route
+    programs (cheap, rebuilt on relocation)."""
 
     def __init__(self, capacity: int = 256) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self._store: collections.OrderedDict[str, Any] = collections.OrderedDict()
+        self._routes: dict[str, Any] = {}   # "<owner>|<placement>" -> routes
         self.stats = CacheStats()
+        self.route_stats = RouteStats()
 
     def __len__(self) -> int:
         return len(self._store)
@@ -115,6 +168,37 @@ class BitstreamCache:
         LRU order or hit/miss statistics — for introspection, not dispatch."""
         return self._store.get(key)
 
+    # -- level 2: per-placement route programs --------------------------------
+    def route_program(self, owner: str, placement_desc: str,
+                      build: Callable[[], Any]) -> Any:
+        """The cheap per-placement artifact for ``owner`` (a resident id or
+        kernel key) at ``placement_desc``; built on first request and timed
+        as route-emission (NOT download) cost.  Relocation lands here — a
+        new placement emits a new route program while the kernel artifact
+        above stays untouched."""
+        k = f"{owner}|{placement_desc}"
+        if k in self._routes:
+            self.route_stats.hits += 1
+            return self._routes[k]
+        t0 = time.perf_counter()
+        routes = build()
+        self.route_stats.emit_seconds += time.perf_counter() - t0
+        self.route_stats.emitted += 1
+        self._routes[k] = routes
+        return routes
+
+    def evict_routes(self, owner: str) -> int:
+        """Drop every route program owned by ``owner`` (resident eviction —
+        its placements are meaningless once the tiles are released)."""
+        doomed = [k for k in self._routes if k.startswith(f"{owner}|")]
+        for k in doomed:
+            del self._routes[k]
+        return len(doomed)
+
+    def route_programs(self) -> int:
+        """Route programs currently held (introspection)."""
+        return len(self._routes)
+
     def keys(self) -> list[str]:
         """Current keys, LRU order (oldest first) — the residency layer walks
         these when coupling PR-region release with bitstream eviction."""
@@ -141,11 +225,13 @@ class BitstreamCache:
         return len(doomed)
 
     def clear(self) -> None:
-        """Drop every entry.  Stats survive — like :meth:`evict_prefix`, a
-        flush is an eviction event, not amnesia (hit/miss/download history
-        stays measurable across reconfigurations)."""
+        """Drop every entry (both levels).  Stats survive — like
+        :meth:`evict_prefix`, a flush is an eviction event, not amnesia
+        (hit/miss/download history stays measurable across
+        reconfigurations)."""
         self.stats.evictions += len(self._store)
         self._store.clear()
+        self._routes.clear()
 
 
 def aot_compile(fn: Callable[..., Any], abstract_args: tuple,

@@ -9,6 +9,9 @@ single source of truth for which tile belongs to which resident accelerator:
 * :meth:`admit` claims a placement's tiles for a resident (overlap = bug,
   raised as :class:`FabricError`; the placer must have packed into free
   tiles via ``placement.place(..., occupied=fabric.occupied())``),
+* :meth:`relocate` rehomes a resident onto new tiles *without* forfeiting
+  its compiled kernel artifacts or download ledger (relocatable bitstreams:
+  the executable is placement-free; only the route program is re-emitted),
 * :meth:`release` frees a resident's tiles (PR-region release),
 * :meth:`touch` / :meth:`lru` implement the recency order
   :meth:`Overlay.assemble <repro.core.overlay.Overlay.assemble>` reclaims in,
@@ -48,14 +51,20 @@ class ResidentAccelerator:
     program: Program               # controller program (reused on re-assembly)
     tiles: frozenset[Coord]        # PR regions held
     occupants: dict[Coord, tuple[TileClass, ...]]  # per-tile operator classes
-    generation: int                # bumped on every (re-)admission
+    generation: int                # bumped on every (re-)admission AND relocation
     last_used: int                 # fabric tick of last assembly/dispatch
     tile_budget: int | None = None # footprint cap this resident was placed under
     fixed: "dict[int, Coord] | None" = None  # pinned tiles (honored on re-place)
-    cache_keys: tuple[str, ...] = ()   # bitstream-cache entries owned
+    cache_keys: tuple[str, ...] = ()   # kernel-artifact cache entries owned
     downloads: int = 1             # times this accelerator was placed+downloaded
     download_cost: float = 0.0     # modeled re-download cost (compile seconds)
     acc: Any = None                # built AssembledAccelerator (hit fast path)
+    # relocatable bitstreams: the generation at (re-)admission opens this
+    # residency epoch; relocations bump `generation` but not this, so a
+    # download submitted before a move can still commit (the kernel artifact
+    # is placement-free).  `relocations` counts moves since admission.
+    admit_generation: int = -1
+    relocations: int = 0
 
 
 def _occupants_of(graph: Graph, placement: Placement) -> dict[Coord, tuple[TileClass, ...]]:
@@ -102,11 +111,25 @@ class Fabric:
 
     def is_current(self, rid: str | None, generation: int) -> bool:
         """Whether (rid, generation) still names a live residency — stale
-        handles (evicted, or evicted-then-readmitted) return False."""
+        handles (evicted, evicted-then-readmitted, or relocated) return
+        False.  Dispatch handles use this: a relocated resident's old routes
+        must be refreshed (cheaply) before running."""
         if rid is None:
             return False
         res = self._residents.get(rid)
         return res is not None and res.generation == generation
+
+    def same_residency(self, rid: str | None, generation: int) -> bool:
+        """Whether ``generation`` belongs to ``rid``'s *current residency
+        epoch* — true for the live generation AND for pre-relocation
+        generations of the same admission.  Download commits use this: a
+        kernel compiled before a relocation is placement-free and still
+        valid, while one submitted before an evict/re-admit is not."""
+        if rid is None:
+            return False
+        res = self._residents.get(rid)
+        return (res is not None
+                and res.admit_generation <= generation <= res.generation)
 
     def occupied(self) -> set[Coord]:
         out: set[Coord] = set()
@@ -195,7 +218,8 @@ class Fabric:
             generation=self._generation, last_used=self._tick,
             tile_budget=tile_budget, fixed=fixed,
             downloads=self._download_counts[rid],
-            download_cost=self._download_costs.get(rid, 0.0))
+            download_cost=self._download_costs.get(rid, 0.0),
+            admit_generation=self._generation)
         self._residents[rid] = res
         return res
 
@@ -228,22 +252,51 @@ class Fabric:
         if res is not None and key not in res.cache_keys:
             res.cache_keys = res.cache_keys + (key,)
 
-    def rehome(self, rid: str, placement: Placement,
-               program: Program) -> ResidentAccelerator:
-        """Move a resident to a new placement (defragmentation).  The caller
-        must have released/recomputed occupancy so the new tiles are free,
-        recompiled the controller ``program`` for the new placement (routes
-        changed), and must evict the old placement's bitstreams (they route
-        differently — different bitstreams)."""
-        res = self._residents[rid]
+    def relocate(self, rid: str, placement: Placement,
+                 program: Program, *,
+                 ignore: "Iterable[str]" = ()) -> ResidentAccelerator:
+        """Move a resident to a new placement — the relocatable-bitstream
+        path (defragmentation, budget repacks, policy moves).
+
+        The new tiles must be free (overlap with *other* residents raises
+        :class:`FabricError`; overlap with the resident's own old tiles is
+        fine) and ``program`` must be the controller program recompiled for
+        the new placement (routes changed).  Unlike an evict + re-admit, the
+        resident KEEPS its kernel-artifact ``cache_keys`` and its download
+        ledger — the compiled executable is placement-free; only the route
+        program changes.  The generation bumps (dispatch handles refresh
+        their routes) while ``admit_generation`` stays (in-flight downloads
+        of this residency epoch may still commit).
+
+        ``ignore`` names residents whose *old* tiles don't count as clashes
+        — a multi-resident repack (defragment / reconfigure) moves several
+        residents onto a mutually-disjoint plan, so tiles about to be
+        vacated by a later move in the same plan are fair game.
+        """
+        res = self._residents.get(rid)
+        if res is None:
+            raise FabricError(f"relocate: no resident {rid!r}")
+        skip = set(ignore) | {rid}
+        occupied_others: set[Coord] = set()
+        for other in self._residents.values():
+            if other.rid not in skip:
+                occupied_others |= other.tiles
+        tiles = frozenset(placement.assignment.values())
+        clash = tiles & occupied_others
+        if clash:
+            holders = {c: r.name for r in self._residents.values()
+                       if r.rid not in skip for c in r.tiles if c in clash}
+            raise FabricError(
+                f"relocation of {res.name!r} overlaps occupied tiles "
+                f"{holders}")
         res.placement = placement
         res.program = program
-        res.tiles = frozenset(placement.assignment.values())
+        res.tiles = tiles
         res.occupants = _occupants_of(res.graph, placement)
         self._generation += 1
         res.generation = self._generation
-        res.cache_keys = ()
-        res.acc = None                # built for the old placement — stale
+        res.relocations += 1
+        res.acc = None                # routes changed — rebind (cheap)
         return res
 
     # -- metrics --------------------------------------------------------------
@@ -277,6 +330,7 @@ class Fabric:
                           "tiles": sorted(res.tiles),
                           "downloads": res.downloads,
                           "download_cost": round(res.download_cost, 6),
+                          "relocations": res.relocations,
                           "last_used": res.last_used}
                 for res in self.lru_order()
             },

@@ -21,6 +21,13 @@ Two execution modes, mirroring the paper's runtime:
      transfer.  This reproduces Fig. 3: static placements with more
      pass-through tiles pay more ppermute hops; dynamic placement pays ~none.
 
+Relocatable bitstreams: the compute body (:func:`build_kernel`) is
+*placement-invariant* — it takes the per-edge hop counts as a runtime
+``routes`` vector (:func:`route_vector`), so ONE compiled executable serves
+every placement of a graph.  Moving a resident to new tiles re-emits only
+the routes vector (and the controller route program); the expensive XLA
+compile — the paper's PR bitstream download — is never repaid.
+
 The assembled callable is pure and traceable: it can be jitted, differentiated,
 lowered and AOT-compiled (then held in the BitstreamCache).
 """
@@ -134,18 +141,100 @@ class AssembledAccelerator:
     # (JitAssembled) re-assemble instead of running off released tiles.
     resident_id: str | None = None
     generation: int = -1
+    # relocatable-bitstream split: ``kernel(routes, *inputs)`` is the
+    # placement-invariant compute body; ``routes`` is this placement's
+    # per-edge hop vector.  ``fn`` == kernel with routes bound.
+    kernel: Callable[..., Any] | None = None
+    routes: Any = None
 
     def __call__(self, *args):
         return self.fn(*args)
 
 
-def _build_eval_fn(graph: Graph, placement: Placement, *,
-                   hop_fn: Callable[[Any, int], Any]) -> Callable[..., Any]:
-    """Walk the DFG once; return a traceable fn with hops realized by hop_fn."""
-    nodes = graph.toposorted()
-    edge_hops = placement.edge_hops
+def edge_order(graph: Graph) -> list[tuple[int, int]]:
+    """Canonical (src, dst) order of every dataflow edge — the index space
+    of the ``routes`` vector.  Depends only on the graph, never on a
+    placement; delegates to :meth:`Graph.edges` so there is exactly one
+    definition of the ordering."""
+    return graph.edges()
 
-    def fn(*inputs):
+
+def route_vector(graph: Graph, placement: Placement) -> Any:
+    """The per-placement route program's data half: an int32 vector of
+    Manhattan hop counts, one per edge in :func:`edge_order` order.  This —
+    not the compiled executable — is all that changes when a resident moves."""
+    hops = placement.edge_hops
+    return jnp.asarray([hops.get(e, 0) for e in edge_order(graph)],
+                       dtype=jnp.int32)
+
+
+def bind_routes(kernel: Callable[..., Any], routes: Any) -> Callable[..., Any]:
+    """Close a placement-invariant kernel over one placement's routes."""
+    return partial(kernel, routes)
+
+
+def _dyn_barrier_hops(v, h):
+    """Local mode: one *physical copy pass* per pass-through tile (h-1 for a
+    h-hop route).  An FPGA pass-through tile registers and forwards the
+    stream — one full pass over the data with no compute — modelled as a
+    multiply by an opaque 1.0 (``optimization_barrier`` makes the scalar
+    opaque so XLA can neither fold the multiply nor fuse across it).
+    ``h`` is a *traced* scalar from the routes vector, so the loop lowers to
+    a ``fori_loop`` whose trip count the placement supplies at dispatch time
+    — the compiled body is placement-invariant.  ``v`` may be a pytree
+    (tuple-valued residue nodes): the whole bundle crosses the tile."""
+    def one_leaf(leaf):
+        def body(_, x):
+            one = jax.lax.optimization_barrier(jnp.ones((), x.dtype))
+            return jax.lax.optimization_barrier(x * one)
+        return jax.lax.fori_loop(0, jnp.maximum(h - 1, 0), body, leaf)
+    return jax.tree.map(one_leaf, v)
+
+
+def _dyn_ici_hops(axis: str, n_dev: int) -> Callable[[Any, Any], Any]:
+    """Sharded mode: ``h`` forward ``ppermute`` ring steps (the pass-through
+    latency actually paid) and one shift-by--h return permute picked by a
+    ``switch`` over the ring's static permutations, all driven by the traced
+    hop count — one compiled collective program serves every placement."""
+    ring = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def back_branch(k: int):
+        if k == 0:
+            return lambda x: x
+        perm = [(i, (i - k) % n_dev) for i in range(n_dev)]
+        return lambda x: jax.lax.ppermute(x, axis, perm=perm)
+
+    branches = [back_branch(k) for k in range(n_dev)]
+
+    def hop_fn(v, h):
+        def one_leaf(leaf):
+            leaf = jax.lax.fori_loop(
+                0, h, lambda _, x: jax.lax.ppermute(x, axis, perm=ring), leaf)
+            # return to origin so downstream ops see position-independent
+            # data; the forward hops already paid the pass-through latency
+            return jax.lax.switch(jnp.mod(h, n_dev), branches, leaf)
+        return jax.tree.map(one_leaf, v)
+
+    return hop_fn
+
+
+def build_kernel(graph: Graph, *,
+                 hop_fn: Callable[[Any, Any], Any] | None = None
+                 ) -> Callable[..., Any]:
+    """The placement-invariant compute body: ``kernel(routes, *inputs)``.
+
+    Walks the DFG once and returns a traceable fn in which every dataflow
+    edge's hop cost is looked up in the runtime ``routes`` vector
+    (:func:`route_vector`).  Compiling this kernel produces ONE executable
+    valid for *every* placement of ``graph`` — the TPU analogue of the
+    paper's pre-synthesized bitstream being downloadable into any compatible
+    PR region.  Relocation swaps the routes vector; the executable stays.
+    """
+    nodes = graph.toposorted()
+    eidx = {e: i for i, e in enumerate(edge_order(graph))}
+    hop = hop_fn or _dyn_barrier_hops
+
+    def kernel(routes, *inputs):
         vals: dict[int, Any] = dict(zip(graph.input_ids, inputs))
         for n in nodes:
             if n.kind == "input":
@@ -155,11 +244,7 @@ def _build_eval_fn(graph: Graph, placement: Placement, *,
                 continue
             args = []
             for src in n.inputs:
-                v = vals[src]
-                h = edge_hops.get((src, n.node_id), 0)
-                if h > 0:
-                    v = hop_fn(v, h)
-                args.append(v)
+                args.append(hop(vals[src], routes[eidx[(src, n.node_id)]]))
             if n.kind == "op":
                 vals[n.node_id] = n.op.fn(*args)
             elif n.kind == "select":
@@ -168,40 +253,31 @@ def _build_eval_fn(graph: Graph, placement: Placement, *,
         outs = tuple(vals[i] for i in graph.output_ids)
         return outs[0] if len(outs) == 1 else outs
 
-    return fn
-
-
-def _barrier_hops(v, h: int):
-    """Local mode: one *physical copy pass* per pass-through tile (h-1 for a
-    h-hop route).  An FPGA pass-through tile registers and forwards the
-    stream — one full pass over the data with no compute — modelled as a
-    multiply by an opaque 1.0 (``optimization_barrier`` makes the scalar
-    opaque so XLA can neither fold the multiply nor fuse across it).
-    Adjacent tiles (h == 1) pipeline freely — the paper's contiguous case —
-    so dynamic placements lower to fully fusable programs.  ``v`` may be a
-    pytree (tuple-valued residue nodes): the whole bundle crosses the tile."""
-    def one_leaf(leaf):
-        for _ in range(max(h - 1, 0)):
-            one = jax.lax.optimization_barrier(jnp.ones((), leaf.dtype))
-            leaf = jax.lax.optimization_barrier(leaf * one)
-        return leaf
-    return jax.tree.map(one_leaf, v)
+    return kernel
 
 
 def assemble(graph: Graph, placement: Placement, *,
-             program: Program | None = None) -> AssembledAccelerator:
-    """JIT-assemble the accelerator for single-device execution."""
+             program: Program | None = None,
+             routes: Any = None) -> AssembledAccelerator:
+    """JIT-assemble the accelerator for single-device execution.
+
+    The returned accelerator carries the placement-invariant ``kernel`` and
+    this placement's ``routes`` separately; ``fn`` is the bound pair."""
     graph.validate()
     program = program or compile_graph(graph, placement)
-    fn = _build_eval_fn(graph, placement, hop_fn=_barrier_hops)
+    kernel = build_kernel(graph)
+    if routes is None:
+        routes = route_vector(graph, placement)
     return AssembledAccelerator(
-        name=graph.name, fn=fn, program=program, placement=placement,
-        total_hops=placement.total_hops, instruction_mix=program.mix())
+        name=graph.name, fn=bind_routes(kernel, routes), program=program,
+        placement=placement, total_hops=placement.total_hops,
+        instruction_mix=program.mix(), kernel=kernel, routes=routes)
 
 
 def assemble_sharded(graph: Graph, placement: Placement, mesh: jax.sharding.Mesh,
                      axis: str = "tiles",
-                     program: Program | None = None) -> AssembledAccelerator:
+                     program: Program | None = None,
+                     routes: Any = None) -> AssembledAccelerator:
     """JIT-assemble with *real* ICI transfers: each hop = one ``ppermute``
     along the device ring of ``axis``.
 
@@ -214,28 +290,20 @@ def assemble_sharded(graph: Graph, placement: Placement, mesh: jax.sharding.Mesh
     """
     graph.validate()
     program = program or compile_graph(graph, placement)
-    n_dev = mesh.shape[axis]
-    ring = [(i, (i + 1) % n_dev) for i in range(n_dev)]
-
-    def hop_fn(v, h: int):
-        def one_leaf(leaf):
-            for _ in range(h):
-                leaf = jax.lax.ppermute(leaf, axis, perm=ring)
-            # return to origin so downstream ops see position-independent
-            # data; the forward hops already paid the pass-through latency
-            back = [(i, (i - h) % n_dev) for i in range(n_dev)]
-            return jax.lax.ppermute(leaf, axis, perm=back)
-        return jax.tree.map(one_leaf, v)
-
-    fn = _build_eval_fn(graph, placement, hop_fn=hop_fn)
+    kernel = build_kernel(graph, hop_fn=_dyn_ici_hops(axis, mesh.shape[axis]))
+    if routes is None:
+        routes = route_vector(graph, placement)
     return AssembledAccelerator(
-        name=f"{graph.name}@{axis}", fn=fn, program=program, placement=placement,
-        total_hops=placement.total_hops, instruction_mix=program.mix())
+        name=f"{graph.name}@{axis}", fn=bind_routes(kernel, routes),
+        program=program, placement=placement,
+        total_hops=placement.total_hops, instruction_mix=program.mix(),
+        kernel=kernel, routes=routes)
 
 
-def wrap_sharded(acc: AssembledAccelerator, graph: Graph,
-                 mesh: jax.sharding.Mesh) -> Callable[..., Any]:
-    """Wrap a sharded-assembled accelerator in shard_map + jit.
+def wrap_sharded_kernel(acc: AssembledAccelerator, graph: Graph,
+                        mesh: jax.sharding.Mesh) -> Callable[..., Any]:
+    """shard_map + jit the *placement-invariant* kernel: the result takes
+    ``(routes, *inputs)`` — the relocatable artifact the overlay caches.
 
     In/out are replicated: the overlay streams whole vectors *through* tiles;
     it does not shard the data (data sharding belongs to the model layer).
@@ -246,6 +314,13 @@ def wrap_sharded(acc: AssembledAccelerator, graph: Graph,
 
     n_in = len(graph.input_ids)
     smapped = shard_map(
-        acc.fn, mesh=mesh, in_specs=(P(),) * n_in, out_specs=P(),
+        acc.kernel, mesh=mesh, in_specs=(P(),) * (n_in + 1), out_specs=P(),
         check_vma=False)
     return jax.jit(smapped)
+
+
+def wrap_sharded(acc: AssembledAccelerator, graph: Graph,
+                 mesh: jax.sharding.Mesh) -> Callable[..., Any]:
+    """Ready-to-call jitted sharded accelerator for ``acc``'s own placement
+    (the routes-bound convenience over :func:`wrap_sharded_kernel`)."""
+    return bind_routes(wrap_sharded_kernel(acc, graph, mesh), acc.routes)

@@ -8,6 +8,12 @@ these instructions; ``interpreter.py`` executes the program to *assemble* the
 accelerator (trace-time) — ROUTE/BYPASS become ICI ``ppermute`` hops (or
 identity moves with hop accounting when run on a single device), VEXEC invokes
 the placed operator bitstream, SELECT realizes speculative branching.
+
+Relocatable bitstreams: a program splits into a *placement-invariant compute
+body* (:func:`compile_compute` — LD/VEXEC/SELECT/ST, tile bindings open) and
+a cheap *route program* (:func:`compile_routes` — the ROUTE/BYPASS
+interconnect a placement implies).  :func:`compile_graph` weaves the two into
+the full controller program; relocating a resident re-emits only the routes.
 """
 
 from __future__ import annotations
@@ -139,8 +145,84 @@ def _hop_opcode(frm: tuple[int, int], to: tuple[int, int]) -> Opcode:
     raise ValueError(f"non-adjacent hop {frm}->{to}")
 
 
+def _emit_node_routes(node, assign: dict[int, "tuple[int, int]"], emit) -> None:
+    """Interconnect instructions routing each producer edge to ``node``'s
+    tile: ROUTE_*_OUT per hop plus BYPASS on the pass-through tiles.  This is
+    the *placement-dependent* half of a program — it is all that changes
+    when a resident accelerator relocates."""
+    nid = node.node_id
+    tile = assign[nid]
+    for src in node.inputs:
+        src_tile = assign.get(src)
+        if src_tile is None or src_tile == tile:
+            continue  # border input or co-located — no interconnect hops
+        path = [src_tile] + route(src_tile, tile) + [tile]
+        for a, b in zip(path[:-1], path[1:]):
+            emit(Instruction(_hop_opcode(a, b), dst=nid, srcs=(src,), tile=a))
+        # tiles strictly between src and dst only bypass (Fig. 2 pass-through)
+        for pt in route(src_tile, tile):
+            emit(Instruction(Opcode.BYPASS_EW, srcs=(src,), tile=pt))
+
+
+def _emit_node_compute(node, emit, tile: "tuple[int, int] | None" = None) -> None:
+    """Compute/memory instructions for one node — the *placement-invariant*
+    half (``tile=None`` leaves the tile binding open; weaving a full program
+    binds the placement's coordinate)."""
+    nid = node.node_id
+    if node.kind == "input":
+        emit(Instruction(Opcode.LD_STREAM, dst=nid, meta=node.name))
+        return
+    if node.kind == "const":
+        emit(Instruction(Opcode.LD_CONST, dst=nid, meta=node.name))
+        return
+    if node.kind == "select":
+        pred, t, e = node.inputs
+        emit(Instruction(Opcode.SPEC_BEGIN, tile=tile, srcs=(t, e)))
+        emit(Instruction(Opcode.SELECT, dst=nid, srcs=(pred, t, e), tile=tile))
+        emit(Instruction(Opcode.SPEC_COMMIT, tile=tile))
+        return
+    # kind == "op"
+    emit(Instruction(Opcode.LD_TILE, dst=nid, srcs=node.inputs, tile=tile))
+    is_reduce = node.op is not None and node.op.name.startswith(("reduce", "scan"))
+    emit(Instruction(Opcode.VEXEC_ACC if is_reduce else Opcode.VEXEC,
+                     dst=nid, srcs=node.inputs, tile=tile, meta=node.op))
+    emit(Instruction(Opcode.SET_REG, dst=nid, tile=tile))
+
+
+def compile_compute(graph: Graph) -> Program:
+    """The placement-invariant compute body of a graph's controller program.
+
+    Contains every LD/VEXEC/SELECT/ST instruction with the tile bindings
+    left open — no ROUTE/BYPASS, because interconnect programming is a
+    property of a *placement*, not of the graph.  One compute body serves
+    every placement of the graph (relocatable-bitstream identity).
+    """
+    graph.validate()
+    ins: list[Instruction] = []
+    for node in graph.toposorted():
+        _emit_node_compute(node, ins.append)
+    for out in graph.output_ids:
+        ins.append(Instruction(Opcode.ST_STREAM, srcs=(out,), meta="out"))
+    ins.append(Instruction(Opcode.BARRIER))
+    return Program(graph.name, ins)
+
+
+def compile_routes(graph: Graph, placement: Placement) -> Program:
+    """The placement-dependent route program: only the interconnect
+    instructions (ROUTE hops + pass-through BYPASSes) a placement implies.
+    Cheap to re-emit — this is all a relocation recompiles.
+    """
+    graph.validate()
+    ins: list[Instruction] = []
+    assign = placement.assignment
+    for node in graph.toposorted():
+        if node.kind == "op":
+            _emit_node_routes(node, assign, ins.append)
+    return Program(f"{graph.name}@routes", ins)
+
+
 def compile_graph(graph: Graph, placement: Placement) -> Program:
-    """Lower a placed DFG to the controller ISA.
+    """Lower a placed DFG to the controller ISA (full woven program).
 
     Emission per node, in topological order:
       input   -> LD_STREAM (border BRAM in)
@@ -149,6 +231,9 @@ def compile_graph(graph: Graph, placement: Placement) -> Program:
                  for every producer edge, then LD_TILE + VEXEC[_ACC] + SET_REG
       select  -> SPEC_BEGIN ... SELECT ... SPEC_COMMIT
       output  -> ST_STREAM (border BRAM out)
+
+    Equivalent to weaving :func:`compile_compute` (placement-invariant) with
+    :func:`compile_routes` (placement-dependent) and binding tiles.
     """
     graph.validate()
     ins: list[Instruction] = []
@@ -156,39 +241,13 @@ def compile_graph(graph: Graph, placement: Placement) -> Program:
     assign = placement.assignment
 
     for node in graph.toposorted():
-        nid = node.node_id
-        if node.kind == "input":
-            emit(Instruction(Opcode.LD_STREAM, dst=nid, meta=node.name))
-            continue
-        if node.kind == "const":
-            emit(Instruction(Opcode.LD_CONST, dst=nid, meta=node.name))
-            continue
-
-        if node.kind == "select":
-            pred, t, e = node.inputs
-            tile = assign.get(nid)
-            emit(Instruction(Opcode.SPEC_BEGIN, tile=tile, srcs=(t, e)))
-            emit(Instruction(Opcode.SELECT, dst=nid, srcs=(pred, t, e), tile=tile))
-            emit(Instruction(Opcode.SPEC_COMMIT, tile=tile))
-            continue
-
-        # kind == "op": route each producer's data to this node's tile
-        tile = assign[nid]
-        for src in node.inputs:
-            src_tile = assign.get(src)
-            if src_tile is None or src_tile == tile:
-                continue  # border input or co-located — no interconnect hops
-            path = [src_tile] + route(src_tile, tile) + [tile]
-            for a, b in zip(path[:-1], path[1:]):
-                emit(Instruction(_hop_opcode(a, b), dst=nid, srcs=(src,), tile=a))
-            # tiles strictly between src and dst only bypass (Fig. 2 pass-through)
-            for pt in route(src_tile, tile):
-                emit(Instruction(Opcode.BYPASS_EW, srcs=(src,), tile=pt))
-        emit(Instruction(Opcode.LD_TILE, dst=nid, srcs=node.inputs, tile=tile))
-        is_reduce = node.op is not None and node.op.name.startswith(("reduce", "scan"))
-        emit(Instruction(Opcode.VEXEC_ACC if is_reduce else Opcode.VEXEC,
-                         dst=nid, srcs=node.inputs, tile=tile, meta=node.op))
-        emit(Instruction(Opcode.SET_REG, dst=nid, tile=tile))
+        if node.kind == "op":
+            _emit_node_routes(node, assign, emit)
+            _emit_node_compute(node, emit, tile=assign[node.node_id])
+        elif node.kind == "select":
+            _emit_node_compute(node, emit, tile=assign.get(node.node_id))
+        else:
+            _emit_node_compute(node, emit)
 
     for out in graph.output_ids:
         emit(Instruction(Opcode.ST_STREAM, srcs=(out,), meta="out"))

@@ -25,8 +25,12 @@ Also provided, mirroring the paper's runtime controls:
   (DESIGN.md §5): misses are served immediately by a fallback while the
   bitstream compiles on a background scheduler and swaps in atomically;
   ``jitted.prefetch(*args)`` starts downloads ahead of demand,
-* ``Overlay.reconfigure()``     — flush the fabric: placements + bitstreams,
+* ``Overlay.reconfigure()``     — flush the fabric: placements + bitstreams
+  (``relocate=True`` moves residents instead — kernels survive),
 * ``Overlay.evict(name)``       — free one accelerator's PR regions,
+* ``Overlay.defragment()`` / ``Overlay.relocate(graph, placement)`` — move
+  residents between placements *without* re-downloading: compiled kernel
+  artifacts are placement-free (DESIGN.md §6), only route programs re-emit,
 * ``Overlay.assemble(graph)``   — the low-level IR path (hand-built Graphs),
   still public, idempotent and cached: re-assembling the same graph signature
   is a cache *hit* (the paper's "only incurred at startup").
@@ -38,6 +42,7 @@ default 3x3 overlay for scripts that don't manage a fabric explicitly.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 import warnings
@@ -50,16 +55,19 @@ from repro.core import cache as cache_lib
 from repro.core import interpreter as interp
 from repro.core import trace as trace_lib
 from repro.core.cache import BitstreamCache
-from repro.core.fabric import Fabric, ResidentAccelerator
+from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
 from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
 from repro.core.placement import (Coord, Placement, PlacementError,
-                                  PlacementPolicy, TileGrid, place)
+                                  PlacementPolicy, TileGrid,
+                                  check_assignment, place)
 from repro.core.scheduler import DownloadHandle, DownloadScheduler
 
 # a persistently failing background compile stops being retried after this
 # many attempts; the entry keeps serving from its fallback
 _MAX_DOWNLOAD_FAILURES = 3
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -72,6 +80,8 @@ class OverlayStats:
     evictions: int = 0          # residents released (explicit or reclaimed)
     reclaims: int = 0           # LRU evictions forced by placement pressure
     defrags: int = 0            # defragmentation passes that moved residents
+    relocations: int = 0        # residents moved WITHOUT re-downloading
+    defrag_failures: int = 0    # defrag passes aborted by an unplaceable survivor
     prefetches: int = 0         # downloads begun on a hint, not a demand miss
     prefetch_hits: int = 0      # demand requests satisfied by a prior prefetch
     fallback_calls: int = 0     # calls served by a fallback mid-download
@@ -250,10 +260,13 @@ class JitAssembled:
         entry = self._traced(self._sig_key(dyn, static_repr), closed, dyn)
         acc = entry.acc
         if acc is not None and self.overlay.resident_current(acc):
-            # hot path: still resident in the fabric — just bump recency
-            self.overlay.fabric.touch(acc.resident_id)
-            self.overlay._note_demand(acc.resident_id)
-            return entry
+            if not self.overlay.repack(acc.resident_id, self.tile_budget):
+                # hot path: still resident in the fabric — just bump recency
+                self.overlay.fabric.touch(acc.resident_id)
+                self.overlay._note_demand(acc.resident_id)
+                return entry
+            # the budget changed and the resident relocated: fall through so
+            # the (cheap) re-assembly below rebinds the entry to its routes
         # first assembly for this signature, or the accelerator was evicted
         # from the fabric since (LRU reclaim / reconfigure): re-place and
         # re-download
@@ -557,14 +570,16 @@ class Overlay:
                 if self.auto_defragment:
                     self.defragment()
 
-    def _bitstream_key(self, graph: Graph, avals: tuple,
-                       placement: Placement,
-                       jit_kwargs: dict[str, Any] | None) -> str:
-        return cache_lib.cache_key(
+    def _kernel_key(self, graph: Graph, avals: tuple,
+                    jit_kwargs: dict[str, Any] | None) -> str:
+        """Placement-FREE identity of the compiled kernel artifact: one
+        executable serves every placement of this graph (the routes vector
+        is a runtime argument) — the relocatable-bitstream invariant."""
+        return cache_lib.kernel_key(
             graph.name, cache_lib.signature_of(avals),
             mesh_desc=str(self.mesh.shape) if self.mesh else "local",
-            placement_desc=repr(sorted(placement.assignment.items())),
-            extra=graph.fingerprint() + repr(sorted((jit_kwargs or {}).items())))
+            fingerprint=graph.fingerprint(),
+            extra=repr(sorted((jit_kwargs or {}).items())))
 
     def _get_or_admit(self, graph: Graph, avals: tuple, rid: str,
                       fixed: dict[int, Coord] | None,
@@ -577,6 +592,11 @@ class Overlay:
         resident = self.fabric.get(rid)
         if resident is not None:
             self.fabric.touch(rid)
+            if tile_budget is not None and tile_budget != resident.tile_budget:
+                # budget repack: re-place under the new footprint cap and
+                # RELOCATE — the kernel artifact is placement-free, so a
+                # policy-driven resize never pays a re-download
+                self._repack_budget(resident, tile_budget)
             return resident
         if reclaim:
             placement = self._place_with_reclaim(graph, fixed, tile_budget)
@@ -599,18 +619,147 @@ class Overlay:
 
     def _base_acc(self, graph: Graph,
                   resident: ResidentAccelerator) -> interp.AssembledAccelerator:
-        """The un-jitted assembled accelerator for a resident (built once)."""
+        """The un-jitted assembled accelerator for a resident (built once
+        per placement; a relocation clears it and this rebinds — no XLA)."""
         if resident.acc is None:
+            routes = self.cache.route_program(
+                resident.rid, resident.placement.descriptor(),
+                lambda: interp.route_vector(graph, resident.placement))
             if self.mesh is not None:
                 acc = interp.assemble_sharded(graph, resident.placement,
                                               self.mesh, self.tile_axis,
-                                              program=resident.program)
+                                              program=resident.program,
+                                              routes=routes)
             else:
                 acc = interp.assemble(graph, resident.placement,
-                                      program=resident.program)
+                                      program=resident.program, routes=routes)
             resident.acc = dataclasses.replace(
                 acc, resident_id=resident.rid, generation=resident.generation)
         return resident.acc
+
+    def _repack_budget(self, resident: ResidentAccelerator,
+                       tile_budget: int | None) -> None:
+        """Re-place a resident under a changed footprint cap via relocation
+        (caller holds the lock).  Best-effort: under pressure the old
+        placement stands and the new budget applies at the next re-place."""
+        occ = self.fabric.occupied() - resident.tiles
+        try:
+            pl = place(resident.graph, self.grid, self.policy, resident.fixed,
+                       occupied=occ, max_tiles=tile_budget)
+        except PlacementError:
+            resident.tile_budget = tile_budget
+            return
+        resident.tile_budget = tile_budget
+        if pl.assignment != resident.placement.assignment:
+            self._relocate_resident(resident.rid, pl)
+
+    def _relocate_resident(self, rid: str, placement: Placement,
+                           ignore: "tuple[str, ...]" = ()
+                           ) -> ResidentAccelerator:
+        """THE relocation path (caller holds the lock): re-emit the
+        controller route program for the new placement and rehome the tiles.
+        Kernel artifacts, the bitstream cache, and the download-cost ledger
+        are untouched — the move costs microseconds, not a PR download.  In
+        async mode a priority rebind job refreshes live jit entries so the
+        first post-move call already dispatches to the kernel."""
+        res = self.fabric.get(rid)
+        program = compile_graph(res.graph, placement)
+        # old-placement route programs die with the move (bounds the side
+        # table at ~one live entry per resident under sustained churn)
+        self.cache.evict_routes(rid)
+        res = self.fabric.relocate(rid, placement, program, ignore=ignore)
+        self.stats.relocations += 1
+        if self.async_downloads and not self.scheduler.closed:
+            gen = res.generation
+            self.scheduler.submit(
+                f"relocate:{rid}",
+                lambda: None,
+                lambda _raw, _dt, rid=rid, gen=gen:
+                    self._rebind_resident(rid, gen),
+                kind="relocate", priority=True)
+        return res
+
+    def _rebind_resident(self, rid: str, generation: int):
+        """Commit half of a relocation job: generation-guarded, cheap (no
+        compile).  Rebinds every live jit entry of ``rid`` onto the cached
+        kernel artifact with the new placement's routes.  Guarded by
+        ``same_residency`` (epoch, not exact generation): back-to-back
+        relocations coalesce onto the first job's key, and the rebind must
+        still serve the latest move — it reads the resident's CURRENT
+        placement, so committing under an older same-epoch generation is
+        correct."""
+        with self._lock:
+            if not self.fabric.same_residency(rid, generation):
+                return None
+            res = self.fabric.get(rid)
+            graph = res.graph
+            avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+            base = self._base_acc(graph, res)
+            for wrapper in list(self._wrappers):
+                for entry in list(wrapper._entries.values()):
+                    acc = entry.acc
+                    if acc is None or acc.resident_id != rid \
+                            or acc.generation == res.generation:
+                        continue
+                    exe = self.cache.peek(
+                        self._kernel_key(graph, avals, entry.jit_kwargs))
+                    if exe is None:
+                        continue   # kernel still downloading — demand path
+                    entry.acc = dataclasses.replace(
+                        base, fn=interp.bind_routes(exe, base.routes))
+            return base
+
+    def repack(self, rid: str, tile_budget: int | None) -> bool:
+        """Re-place a resident under a changed footprint cap via relocation.
+        No-op (False) when ``tile_budget`` is None, unchanged, or the rid is
+        not resident; True when the resident actually moved."""
+        if tile_budget is None:
+            return False
+        # lock-free pre-check: this runs on the jit dispatch hot path, which
+        # must not contend with a multi-ms assemble() holding the lock when
+        # the budget hasn't changed (the overwhelmingly common case)
+        res = self.fabric.get(rid)
+        if res is None or res.tile_budget == tile_budget:
+            return False
+        with self._lock:
+            res = self.fabric.get(rid)          # re-check under the lock
+            if res is None or res.tile_budget == tile_budget:
+                return False
+            gen = res.generation
+            self._repack_budget(res, tile_budget)
+            return self.fabric.get(rid).generation != gen
+
+    def relocate(self, target: "Graph | str",
+                 placement: Placement) -> ResidentAccelerator:
+        """Move a resident accelerator to ``placement`` without paying a
+        re-download (public relocation API).  ``target`` is a graph, an
+        accelerator name (as :meth:`evict` takes — must name exactly one
+        resident), or a resident id.  The new tiles must be free of *other*
+        residents.  Returns the relocated resident."""
+        with self._lock:
+            if isinstance(target, Graph):
+                avals = tuple(target.toposorted()[i].aval
+                              for i in target.input_ids)
+                rid = self._resident_key(target, avals, None)
+            else:
+                rid = str(target)
+                if self.fabric.get(rid) is None:
+                    # resolve by accelerator name, like evict() does
+                    named = [r.rid for r in self.fabric.residents.values()
+                             if r.name == rid]
+                    if len(named) > 1:
+                        raise FabricError(
+                            f"relocate: {rid!r} names {len(named)} residents "
+                            f"— pass a specific resident id")
+                    if named:
+                        rid = named[0]
+            res = self.fabric.get(rid)
+            if res is None:
+                raise FabricError(f"relocate: no resident for {target!r}")
+            # internal paths build placements via place(); a user-supplied
+            # one must prove the same invariants before touching the fabric
+            check_assignment(res.graph, self.grid, placement)
+            return self._relocate_resident(rid, placement)
 
     def assemble(self, graph: Graph, *,
                  fixed: dict[int, Coord] | None = None,
@@ -648,10 +797,10 @@ class Overlay:
             if not jit:
                 return acc
 
-            key = self._bitstream_key(graph, avals, placement, jit_kwargs)
+            key = self._kernel_key(graph, avals, jit_kwargs)
 
             # the BitstreamCache's own LRU may have dropped this resident's
-            # bitstream while it stayed fabric-resident (finite store below
+            # kernel while it stayed fabric-resident (finite store below
             # the region count) — recompiling it now is a real re-download;
             # keep the ledger honest instead of reporting a pure hit
             if key in resident.cache_keys and key not in self.cache:
@@ -671,23 +820,31 @@ class Overlay:
                     self.cache.evict_keys([key])
 
             if key in self.cache:
-                fn = self.cache.get_or_compile(key, lambda: None)  # pure hit
+                # pure hit — the kernel artifact is placement-free, so it
+                # serves this resident's CURRENT routes (post-relocation too)
+                exe = self.cache.get_or_compile(key, lambda: None)
                 self.fabric.add_cache_key(rid, key)
-                return dataclasses.replace(acc, fn=fn)
+                return dataclasses.replace(
+                    acc, fn=interp.bind_routes(exe, base.routes))
             generation = resident.generation
+            routes_aval = jax.ShapeDtypeStruct(base.routes.shape,
+                                               base.routes.dtype)
         # miss: build OUTSIDE the lock — an AOT compile can run for seconds
-        # and must not stall concurrent requests or background commits
+        # and must not stall concurrent requests or background commits.
+        # What compiles is the placement-invariant KERNEL (routes as arg 0).
         t0 = time.perf_counter()
+        kernel_kwargs = cache_lib.kernel_jit_kwargs(jit_kwargs)
         if self.mesh is not None:
-            fn = interp.wrap_sharded(base, graph, self.mesh)
+            exe = interp.wrap_sharded_kernel(base, graph, self.mesh)
         elif aot:
-            fn = cache_lib.aot_compile(base.fn, avals, jit_kwargs=jit_kwargs)
+            exe = cache_lib.aot_compile(base.kernel, (routes_aval,) + avals,
+                                        jit_kwargs=kernel_kwargs)
         else:
-            fn = jax.jit(base.fn, **(jit_kwargs or {}))
+            exe = jax.jit(base.kernel, **kernel_kwargs)
         dt = time.perf_counter() - t0
         with self._lock:
-            if self.fabric.is_current(rid, generation):
-                self.cache.insert_compiled(key, fn, dt)
+            if self.fabric.same_residency(rid, generation):
+                self.cache.insert_compiled(key, exe, dt)
                 if aot:
                     # only eager compiles measure a real download; a lazy
                     # jax.jit returns in ~0s of scheduling noise (XLA
@@ -695,10 +852,16 @@ class Overlay:
                     # model with jitter
                     self.fabric.record_download_cost(rid, dt)
                 self.fabric.add_cache_key(rid, key)
+                # relocated while compiling? the kernel is still valid —
+                # rebind it to the resident's routes as they stand now
+                res_now = self.fabric.get(rid)
+                if res_now is not None and res_now.generation != generation:
+                    base = self._base_acc(graph, res_now)
+                    acc = base
             # else: the resident was reclaimed while we compiled — don't
             # publish an orphan bitstream; the executable itself is still a
             # correct pure function, so the caller keeps it
-        return dataclasses.replace(acc, fn=fn)
+        return dataclasses.replace(acc, fn=interp.bind_routes(exe, base.routes))
 
     # -- asynchronous download pipeline ---------------------------------------
     def submit_download(self, graph: Graph, *,
@@ -734,18 +897,21 @@ class Overlay:
             resident = self._get_or_admit(graph, avals, rid, fixed,
                                           tile_budget, reclaim=reclaim)
             base = self._base_acc(graph, resident)
-            key = self._bitstream_key(graph, avals, resident.placement,
-                                      jit_kwargs)
+            key = self._kernel_key(graph, avals, jit_kwargs)
             if kind == "prefetch":
                 self.stats.prefetches += 1
                 self._prefetched.add(rid)
 
             exe = self.cache.peek(key)
             if exe is not None:
-                # bitstream already in the store: no background work needed
+                # kernel already in the store (possibly compiled for another
+                # placement — it is placement-free): bind this resident's
+                # routes and complete inline, no background work needed
                 self.cache.get_or_compile(key, lambda: exe)   # count the hit
+                self.fabric.add_cache_key(rid, key)
                 handle = DownloadHandle(key=rid, kind=kind)
-                handle.result = dataclasses.replace(base, fn=exe)
+                handle.result = dataclasses.replace(
+                    base, fn=interp.bind_routes(exe, base.routes))
                 handle.status = "done"
                 handle._event.set()
                 if on_done is not None:
@@ -763,23 +929,36 @@ class Overlay:
 
     def _compile_bitstream(self, pending: _PendingDownload):
         """The expensive half of a download — eager XLA compile of the
-        assembled accelerator.  Runs on a scheduler worker, no locks held."""
-        return cache_lib.aot_compile(pending.base.fn, pending.avals,
-                                     jit_kwargs=pending.jit_kwargs)
+        placement-invariant kernel (routes as argument 0).  Runs on a
+        scheduler worker, no locks held."""
+        base = pending.base
+        routes_aval = jax.ShapeDtypeStruct(base.routes.shape,
+                                           base.routes.dtype)
+        return cache_lib.aot_compile(
+            base.kernel, (routes_aval,) + pending.avals,
+            jit_kwargs=cache_lib.kernel_jit_kwargs(pending.jit_kwargs))
 
     def _commit_download(self, pending: _PendingDownload, exe,
                          seconds: float):
         """Publish a finished background compile — the atomic swap.  Runs on
         the worker under the overlay lock; a download whose residency was
-        evicted/flushed while compiling must not resurrect it."""
+        evicted/flushed while compiling must not resurrect it.  A residency
+        that merely RELOCATED mid-compile still commits — the kernel is
+        placement-free — and is rebound to the routes as they stand now."""
         with self._lock:
-            if not self.fabric.is_current(pending.rid, pending.generation):
+            if not self.fabric.same_residency(pending.rid,
+                                              pending.generation):
                 self.stats.stale_downloads += 1
                 return None
             self.cache.insert_compiled(pending.key, exe, seconds)
             self.fabric.add_cache_key(pending.rid, pending.key)
             self.fabric.record_download_cost(pending.rid, seconds)
-            return dataclasses.replace(pending.base, fn=exe)
+            res = self.fabric.get(pending.rid)
+            base = pending.base
+            if res.generation != pending.generation:
+                base = self._base_acc(res.graph, res)   # relocated: new routes
+            return dataclasses.replace(
+                base, fn=interp.bind_routes(exe, base.routes))
 
     def prefetch(self, jitted: "JitAssembled", *args) -> DownloadHandle | None:
         """Engine-level prefetch hint: download ``jitted``'s bitstream for
@@ -807,17 +986,25 @@ class Overlay:
     # -- explicit PR-region management ----------------------------------------
     def _evict_resident(self, rid: str) -> int:
         """THE evict path: release a resident's tiles, cancel any download
-        still in flight for it, and drop its bitstreams in one motion.
-        Returns cache entries removed."""
+        (or pending relocation rebind) still in flight for it, and drop its
+        kernel artifacts + route programs in one motion.  Returns cache
+        entries removed."""
         resident = self.fabric.release(rid)
         if resident is None:
             return 0
         # a queued download never runs; a running one is stripped of its
         # right to commit (and the generation guard backstops the race)
         self.scheduler.cancel(rid)
+        self.scheduler.cancel(f"relocate:{rid}")
         self._prefetched.discard(rid)
         self.stats.evictions += 1
-        return self.cache.evict_keys(resident.cache_keys)
+        self.cache.evict_routes(rid)
+        # kernel artifacts are placement-free and may be SHARED (e.g. two
+        # pinnings of one graph): only drop keys no surviving resident owns
+        live_keys = {k for r in self.fabric.residents.values()
+                     for k in r.cache_keys}
+        return self.cache.evict_keys(
+            [k for k in resident.cache_keys if k not in live_keys])
 
     def evict(self, target: "Graph | str") -> int:
         """Free one accelerator's PR regions AND its cached bitstreams
@@ -841,15 +1028,24 @@ class Overlay:
         """Re-place surviving residents contiguously (most-recently-used
         first) to close occupancy holes left by evictions.
 
-        Moving a resident invalidates its bitstreams (a placement routes
-        differently ⇒ different bitstream), so moved accelerators pay a
-        re-download on next use.  All-or-nothing: if any survivor fails to
-        re-place, nothing moves.  Returns the number of residents moved.
+        Moves are **relocations**: the compiled kernel artifacts are
+        placement-free, so a moved resident keeps its bitstreams and its
+        download ledger — only the per-placement route program is re-emitted
+        (microseconds, not a PR download).  All-or-nothing: if any survivor
+        fails to re-place, nothing moves, ``stats.defrag_failures`` counts
+        the aborted pass and a warning names the blocking resident.
+        Returns the number of residents moved.
         """
         with self._lock:
             return self._defragment_locked()
 
-    def _defragment_locked(self) -> int:
+    def _plan_repack(self, on_failure: "Callable[[ResidentAccelerator, PlacementError], bool]"
+                     ) -> "list[tuple[ResidentAccelerator, Placement]] | None":
+        """The shared re-place planner behind defragment() and
+        reconfigure(relocate=True): MRU-first plan over movable residents,
+        pinned residents anchoring the packing.  ``on_failure(res, exc)``
+        decides what an unplaceable survivor means — return True to skip it
+        and keep planning, False to abort (None is returned)."""
         survivors = self.fabric.lru_order()[::-1]   # MRU packs first
         plan: list[tuple[ResidentAccelerator, Placement]] = []
         scratch: set[Coord] = set()
@@ -863,20 +1059,35 @@ class Overlay:
             try:
                 pl = place(res.graph, self.grid, self.policy,
                            occupied=scratch, max_tiles=res.tile_budget)
-            except PlacementError:
-                return 0
+            except PlacementError as exc:
+                if on_failure(res, exc):
+                    continue
+                return None
             plan.append((res, pl))
             scratch |= set(pl.assignment.values())
+        return plan
+
+    def _defragment_locked(self) -> int:
+        def abort(res: ResidentAccelerator, exc: PlacementError) -> bool:
+            self.stats.defrag_failures += 1
+            logger.warning(
+                "defragment aborted: resident %r (%s, %d tiles, "
+                "tile_budget=%s) cannot be re-placed — %s",
+                res.rid, res.name, len(res.tiles), res.tile_budget, exc)
+            return False                       # all-or-nothing: abort the pass
+
+        plan = self._plan_repack(abort)
+        if plan is None:
+            return 0
         moved = 0
+        plan_rids = tuple(res.rid for res, _ in plan)
         for res, pl in plan:
             if pl.assignment == res.placement.assignment:
                 continue
-            self.cache.evict_keys(res.cache_keys)
-            # an in-flight download compiled for the old placement: the
-            # rehome bumps the generation so its commit would be dropped
-            # anyway — cancel it rather than waste the compile
-            self.scheduler.cancel(res.rid)
-            self.fabric.rehome(res.rid, pl, compile_graph(res.graph, pl))
+            # relocation keeps kernel artifacts AND any in-flight download:
+            # the compile is placement-free, so its commit (guarded by
+            # Fabric.same_residency) simply rebinds to the new routes
+            self._relocate_resident(res.rid, pl, ignore=plan_rids)
             moved += 1
         if moved:
             self.stats.defrags += 1
@@ -884,11 +1095,20 @@ class Overlay:
 
     def reconfigure(self, *, policy: PlacementPolicy | None = None,
                     large_fraction: float | None = None,
-                    prefetch: bool = True) -> dict[str, Any]:
+                    prefetch: bool = True,
+                    relocate: bool = False) -> dict[str, Any]:
         """Full-fabric reconfiguration: flush every resident accelerator
         (tiles AND bitstreams; optionally switching placement policy / tile
         mix), so the next assembly re-places and re-downloads from scratch.
         Cache statistics survive the flush.
+
+        ``relocate=True`` is the relocatable-bitstream alternative: instead
+        of flushing, every movable resident is *re-placed under the new
+        policy/grid via relocation* — kernel artifacts, the bitstream cache
+        and the download ledger all survive, so a policy change costs route
+        re-emission, not a fabric-wide re-download.  Residents that no
+        longer fit the new configuration are evicted (they would have been
+        flushed anyway); pinned residents keep their tiles.
 
         In-flight background downloads belong to flushed generations: queued
         ones are cancelled and running ones lose their right to commit, so a
@@ -897,6 +1117,8 @@ class Overlay:
         by re-requesting downloads for every signature the jit wrappers have
         seen — the fabric rewarms in the background while fallbacks serve.
         """
+        if relocate:
+            return self._reconfigure_relocating(policy, large_fraction)
         with self._lock:
             # flushed generations may not commit — cancel/stale them first
             self.scheduler.flush()
@@ -918,6 +1140,34 @@ class Overlay:
                     wrapper._prefetch_known()
         return self.describe()
 
+    def _reconfigure_relocating(self, policy: PlacementPolicy | None,
+                                large_fraction: float | None) -> dict[str, Any]:
+        """``reconfigure(relocate=True)``: apply the new policy/grid and
+        move every movable resident onto it via relocation."""
+        with self._lock:
+            if policy is not None:
+                self.policy = policy
+            if large_fraction is not None:
+                self.grid = TileGrid(self.grid.rows, self.grid.cols,
+                                     large_fraction)
+                self.fabric.grid = self.grid
+            def evict_and_continue(res: ResidentAccelerator,
+                                   exc: PlacementError) -> bool:
+                # no longer fits the new configuration — the flush path
+                # would have dropped it too
+                self._evict_resident(res.rid)
+                return True
+
+            plan = self._plan_repack(evict_and_continue)
+            plan_rids = tuple(res.rid for res, _ in plan)
+            for res, pl in plan:
+                if pl.assignment != res.placement.assignment \
+                        or pl.policy is not res.placement.policy:
+                    self._relocate_resident(res.rid, pl, ignore=plan_rids)
+            self._last_placement = None
+            self.stats.reconfigurations += 1
+        return self.describe()
+
     # -- introspection ----------------------------------------------------------
     def describe(self) -> dict[str, Any]:
         return {
@@ -926,6 +1176,8 @@ class Overlay:
             "policy": self.policy.value,
             "cache": dataclasses.asdict(self.cache.stats),
             "cached_bitstreams": len(self.cache),
+            "route_programs": self.cache.route_programs(),
+            "routes": dataclasses.asdict(self.cache.route_stats),
             "fabric": self.fabric.describe(),
             "assemblies": self.stats.assemblies,
             "reconfigurations": self.stats.reconfigurations,
@@ -935,6 +1187,8 @@ class Overlay:
             "evictions": self.stats.evictions,
             "reclaims": self.stats.reclaims,
             "defrags": self.stats.defrags,
+            "relocations": self.stats.relocations,
+            "defrag_failures": self.stats.defrag_failures,
             "async_downloads": self.async_downloads,
             "cost_aware_reclaim": self.cost_aware_reclaim,
             "prefetches": self.stats.prefetches,

@@ -122,6 +122,13 @@ class Placement:
         """Total ICI nearest-neighbour hops across all dataflow edges."""
         return sum(self.edge_hops.values())
 
+    def descriptor(self) -> str:
+        """Canonical string identity of this placement (node→tile map).
+        Keys the cheap per-placement route programs in the two-level
+        bitstream cache — kernel artifacts deliberately do NOT include it
+        (they are placement-free; see DESIGN.md §6)."""
+        return repr(sorted(self.assignment.items()))
+
     def fragmentation(self, graph: Graph) -> float:
         """Fraction of occupied LARGE tiles holding only SMALL-class ops —
         the paper's internal-fragmentation metric (§II)."""
@@ -298,6 +305,32 @@ def place_dynamic(graph: Graph, grid: TileGrid, *,
 
     return Placement(grid, PlacementPolicy.DYNAMIC, assignment,
                      _edge_costs(graph, assignment))
+
+
+def check_assignment(graph: Graph, grid: TileGrid,
+                     placement: Placement) -> None:
+    """Validate a (possibly hand-built) placement against the invariants
+    ``place()`` guarantees: every op node assigned, coordinates on the grid,
+    and LARGE ops only on LARGE tiles.  Raises :class:`PlacementError` —
+    the guard for placements entering the fabric from outside the placer
+    (e.g. ``Overlay.relocate``)."""
+    nodes = {n.node_id: n for n in graph.toposorted()}
+    coords = set(grid.coords())
+    for nid, coord in placement.assignment.items():
+        node = nodes.get(nid)
+        if node is None:
+            raise PlacementError(f"assignment names unknown node {nid}")
+        if coord not in coords:
+            raise PlacementError(
+                f"tile {coord} outside the {grid.rows}x{grid.cols} grid")
+        if not _class_ok(node, coord, grid):
+            raise PlacementError(
+                f"node {node.name!r} (LARGE) assigned to SMALL tile {coord}")
+    missing = [n.node_id for n in graph.op_nodes()
+               if n.node_id not in placement.assignment]
+    if missing:
+        raise PlacementError(
+            f"assignment missing op nodes {missing[:5]}")
 
 
 def place(graph: Graph, grid: TileGrid, policy: PlacementPolicy,

@@ -72,6 +72,7 @@ class SchedulerStats:
     dropped_stale: int = 0    # work() finished but commit refused (flushed gen)
     cancelled: int = 0        # dequeued before running
     failed: int = 0           # work() raised
+    priority_jobs: int = 0    # jobs that jumped the queue (relocation commits)
     download_seconds: float = 0.0   # total background work time
 
 
@@ -132,12 +133,16 @@ class DownloadScheduler:
     def submit(self, key: str, work: Callable[[], Any],
                commit: Callable[[Any, float], Any], *,
                on_done: "Callable[[Any, DownloadHandle], None] | None" = None,
-               kind: str = "demand") -> DownloadHandle:
+               kind: str = "demand", priority: bool = False) -> DownloadHandle:
         """Enqueue ``work`` (worker thread) followed by ``commit`` (same
         thread; must validate + publish).  Same-key submits while the first
         is in flight coalesce onto it.  ``on_done`` observers are invoked as
         ``on_done(result, handle)`` — the handle carries error/timing, so an
-        observer can distinguish a failed download from a stale one."""
+        observer can distinguish a failed download from a stale one.
+
+        ``priority=True`` puts the job at the *front* of the queue — for
+        cheap generation-guarded relocation commits (re-emit routes, rebind
+        the cached kernel) that must never wait behind a full XLA compile."""
         handle = DownloadHandle(key=key, kind=kind)
         with self._cond:
             if self._shutdown:
@@ -151,7 +156,11 @@ class DownloadScheduler:
             job = _Job(key, work, commit)
             job.handles.append((handle, on_done))
             self._jobs[key] = job
-            self._queue.append(job)
+            if priority:
+                self._queue.appendleft(job)
+                self.stats.priority_jobs += 1
+            else:
+                self._queue.append(job)
             self.stats.submitted += 1
             self._ensure_workers()
             self._cond.notify()

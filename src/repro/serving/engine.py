@@ -83,6 +83,30 @@ class ServeEngine:
         self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
         self._decode_prefetched = False
 
+    # -- fabric management (relocatable bitstreams, DESIGN.md §6) ------------
+    def compact(self) -> int:
+        """Close occupancy holes left by departed co-tenants.  Moves are
+        relocations — the engine's compiled prefill/decode kernels survive,
+        so compaction is safe to call between ticks.  Returns residents
+        moved (0 without an overlay)."""
+        if self.overlay is None:
+            return 0
+        return self.overlay.defragment()
+
+    def resize(self, tile_budget: int) -> None:
+        """Change the engine's per-accelerator footprint cap in place.
+
+        The next prefill/decode dispatch repacks each resident under the
+        new budget via relocation (no re-download): grow when co-tenants
+        leave, shrink to make room before admitting another engine."""
+        if self.overlay is None:
+            raise ValueError("resize() needs an overlay-backed engine")
+        if tile_budget < 1:
+            raise ValueError("tile_budget must be >= 1")
+        self.tile_budget = tile_budget
+        self._decode.tile_budget = tile_budget
+        self._prefill.tile_budget = tile_budget
+
     def _prefetch_decode(self) -> None:
         """Hide the decode download behind prefill: request it once, as soon
         as traffic arrives (async overlays only — on a synchronous overlay
