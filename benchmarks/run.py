@@ -37,12 +37,13 @@ def main(argv: list[str] | None = None) -> None:
                          "meaningless")
     args = ap.parse_args(argv)
 
-    from benchmarks import (branch_speculation, download_pipeline,
-                            fig3_vmul_reduce, isa_mix, pr_overhead,
-                            relocation, residency_churn, tile_granularity)
+    from benchmarks import (branch_speculation, dispatch_overhead,
+                            download_pipeline, fig3_vmul_reduce, isa_mix,
+                            pr_overhead, relocation, residency_churn,
+                            tile_granularity)
     modules = [fig3_vmul_reduce, pr_overhead, download_pipeline, isa_mix,
                tile_granularity, branch_speculation, residency_churn,
-               relocation]
+               relocation, dispatch_overhead]
     print("name,us_per_call,derived")
     rows: list[str] = []
     failed = 0

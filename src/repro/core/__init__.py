@@ -15,16 +15,20 @@ Public API (frontend first — the paper's programming model):
   scheduler.DownloadScheduler                 — async PR-download pipeline
 """
 
-from repro.core.cache import (BitstreamCache, aot_compile, cache_key,
-                              kernel_jit_kwargs, kernel_key, signature_of)
+from repro.core.cache import (BitstreamCache, SpecializationStats, aot_compile,
+                              cache_key, kernel_jit_kwargs, kernel_key,
+                              signature_of, spec_key)
 from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
 from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_graph
 from repro.core.interpreter import (AssembledAccelerator, assemble,
                                     assemble_sharded, bind_routes,
-                                    build_kernel, route_vector, run_program,
-                                    wrap_sharded, wrap_sharded_kernel)
+                                    build_kernel, route_hops, route_vector,
+                                    run_program, specialize_kernel,
+                                    wrap_sharded, wrap_sharded_kernel,
+                                    wrap_sharded_specialized, zero_hop)
 from repro.core.isa import (Instruction, Opcode, Program, compile_compute,
-                            compile_graph, compile_routes)
+                            compile_graph, compile_routes,
+                            compile_specialized)
 from repro.core.overlay import (JitAssembled, Overlay, default_overlay,
                                 jit_assemble)
 from repro.core.patterns import (LIBRARY, Operator, TileClass, register_call,
@@ -41,14 +45,15 @@ __all__ = [
     "Graph", "Instruction",
     "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
     "Placement", "PlacementError", "PlacementPolicy", "Program",
-    "ResidentAccelerator", "TileClass",
+    "ResidentAccelerator", "SpecializationStats", "TileClass",
     "TileGrid", "TraceError", "aot_compile", "assemble", "assemble_sharded",
     "bind_routes", "branchy_graph", "build_kernel", "cache_key",
     "check_assignment", "compile_compute", "compile_graph", "compile_routes",
-    "default_overlay",
+    "compile_specialized", "default_overlay",
     "jit_assemble", "kernel_jit_kwargs", "kernel_key", "place",
     "place_dynamic", "place_static", "register_call", "register_op",
-    "route_vector", "run_program", "saxpy_graph", "signature_of",
-    "trace_to_graph", "vmul_reduce_graph", "wrap_sharded",
-    "wrap_sharded_kernel",
+    "route_hops", "route_vector", "run_program", "saxpy_graph",
+    "signature_of", "spec_key", "specialize_kernel", "trace_to_graph",
+    "vmul_reduce_graph", "wrap_sharded", "wrap_sharded_kernel",
+    "wrap_sharded_specialized", "zero_hop",
 ]

@@ -21,6 +21,16 @@ bitstreams:
 2. **Route programs** (the cheap level): per-placement hop vectors held in a
    side table (:meth:`BitstreamCache.route_program`) and re-emitted in
    microseconds whenever a resident relocates — never worth a download.
+
+On top of the generic kernel level sits a **specialized tier** (DESIGN.md
+§7): route-constant executables keyed by :func:`spec_key` — the kernel key
+*plus* the exact hop vector they were baked for.  A specialized artifact is
+an optimization overlaying its generic kernel, never a replacement: it is
+dropped the instant the resident's routes change (despecialization) and
+dies with its kernel key on eviction, while the generic artifact keeps
+serving throughout.  :class:`SpecializationStats` books the tier's
+lifecycle (specializations / despecializations / specialized hits / stale
+commits dropped by a relocation race).
 """
 
 from __future__ import annotations
@@ -34,14 +44,19 @@ from typing import Any, Callable
 import jax
 
 
+def leaf_signature(a) -> tuple:
+    """THE leaf-level abstract signature: ``(shape, dtype)``.  One
+    definition shared by the cache keys below and the jit wrappers'
+    dispatch-path entry keys — the two must never drift.  Hashable and
+    cheap (no repr/str: this runs per call on the dispatch fast path)."""
+    dtype = getattr(a, "dtype", None)
+    return (tuple(getattr(a, "shape", ())),
+            dtype if dtype is not None else type(a).__name__)
+
+
 def signature_of(args: tuple) -> tuple:
     """Abstract signature of concrete/abstract inputs (shape, dtype) pairs."""
-    out = []
-    for a in jax.tree.leaves(args):
-        shape = getattr(a, "shape", ())
-        dtype = getattr(a, "dtype", type(a).__name__)
-        out.append((tuple(shape), str(dtype)))
-    return tuple(out)
+    return tuple(leaf_signature(a) for a in jax.tree.leaves(args))
 
 
 def cache_key(name: str, signature: tuple, mesh_desc: str = "",
@@ -61,6 +76,14 @@ def kernel_key(name: str, signature: tuple, mesh_desc: str = "",
         repr((name, signature, mesh_desc, fingerprint, extra)).encode()
     ).hexdigest()[:16]
     return f"{name}:{h}"
+
+
+def spec_key(kernel_key: str, hops: "tuple[int, ...]") -> str:
+    """Identity of a route-constant specialized artifact: its generic kernel
+    key plus the exact hop vector baked into it.  Placements with identical
+    hop vectors share one specialized executable; any other routes make it
+    unusable (the generic tier serves instead)."""
+    return f"{kernel_key}|spec|{','.join(map(str, hops))}"
 
 
 def kernel_jit_kwargs(jit_kwargs: "dict[str, Any] | None") -> dict[str, Any]:
@@ -107,6 +130,17 @@ class RouteStats:
     emit_seconds: float = 0.0      # total route-emission time (sub-ms each)
 
 
+@dataclasses.dataclass
+class SpecializationStats:
+    """Lifecycle accounting for the route-constant specialized tier."""
+
+    specializations: int = 0       # specialized artifacts committed
+    despecializations: int = 0     # specialized residents reverted to generic
+    specialized_hits: int = 0      # dispatches served by the specialized tier
+    dropped_stale: int = 0         # spec commits refused (relocated mid-build)
+    compile_seconds: float = 0.0   # background specialize-compile time paid
+
+
 class BitstreamCache:
     """Two-level store: LRU of placement-free compiled kernel artifacts
     (keyed by :func:`kernel_key`) plus a side table of per-placement route
@@ -118,8 +152,10 @@ class BitstreamCache:
         self.capacity = capacity
         self._store: collections.OrderedDict[str, Any] = collections.OrderedDict()
         self._routes: dict[str, Any] = {}   # "<owner>|<placement>" -> routes
+        self._specialized: dict[str, Any] = {}   # spec_key -> executable
         self.stats = CacheStats()
         self.route_stats = RouteStats()
+        self.spec_stats = SpecializationStats()
 
     def __len__(self) -> int:
         return len(self._store)
@@ -141,7 +177,8 @@ class BitstreamCache:
         self.stats.insertions += 1
         self._store[key] = exe
         if len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+            old, _ = self._store.popitem(last=False)
+            self.drop_specialized(old)
             self.stats.evictions += 1
         return exe
 
@@ -151,7 +188,8 @@ class BitstreamCache:
         self._store[key] = exe
         self._store.move_to_end(key)
         if len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+            old, _ = self._store.popitem(last=False)
+            self.drop_specialized(old)
             self.stats.evictions += 1
 
     def insert_compiled(self, key: str, exe: Any, compile_seconds: float) -> None:
@@ -167,6 +205,46 @@ class BitstreamCache:
         """The stored executable for ``key`` (or None) without touching
         LRU order or hit/miss statistics — for introspection, not dispatch."""
         return self._store.get(key)
+
+    # -- specialized tier: route-constant executables -------------------------
+    def specialized(self, key: str) -> Any:
+        """The specialized executable stored under a :func:`spec_key` (or
+        None).  Lookup only — dispatch accounting (``specialized_hits``)
+        belongs to the overlay's dispatch records, not the store."""
+        return self._specialized.get(key)
+
+    def insert_specialized(self, key: str, exe: Any,
+                           compile_seconds: float) -> None:
+        """Publish a finished route-constant compile.  Specialize compiles
+        run strictly in the background and are booked on their own ledger —
+        they are an optimization, not a PR download, so ``CacheStats``
+        (misses/compile_seconds) stays untouched."""
+        if key not in self._specialized:
+            self.spec_stats.specializations += 1
+        self.spec_stats.compile_seconds += compile_seconds
+        self._specialized[key] = exe
+
+    def drop_specialized(self, kernel_key: str) -> int:
+        """Drop every specialized variant of one generic kernel artifact —
+        for the paths where the kernel key itself dies (eviction of the
+        generic store entry, LRU replacement, flush).  Returns entries
+        removed."""
+        prefix = f"{kernel_key}|spec|"
+        doomed = [k for k in self._specialized if k.startswith(prefix)]
+        for k in doomed:
+            del self._specialized[k]
+        return len(doomed)
+
+    def drop_specialized_exact(self, key: str) -> int:
+        """Drop ONE specialized executable by its full :func:`spec_key` —
+        for despecialization/eviction of a single resident, where a sibling
+        resident sharing the kernel key (but placed at different routes)
+        must keep its own variant.  Returns entries removed (0 or 1)."""
+        return 1 if self._specialized.pop(key, None) is not None else 0
+
+    def specialized_count(self) -> int:
+        """Specialized executables currently held (introspection)."""
+        return len(self._specialized)
 
     # -- level 2: per-placement route programs --------------------------------
     def route_program(self, owner: str, placement_desc: str,
@@ -212,6 +290,9 @@ class BitstreamCache:
             if k in self._store:
                 del self._store[k]
                 removed += 1
+            # a specialized variant is meaningless without (or beyond the
+            # life of) its generic kernel: it dies with the key
+            self.drop_specialized(k)
         self.stats.evictions += removed
         return removed
 
@@ -221,6 +302,9 @@ class BitstreamCache:
         doomed = [k for k in self._store if k.startswith(prefix)]
         for k in doomed:
             del self._store[k]
+            self.drop_specialized(k)
+        for k in [k for k in self._specialized if k.startswith(prefix)]:
+            del self._specialized[k]         # spec variants of evicted kernels
         self.stats.evictions += len(doomed)
         return len(doomed)
 
@@ -232,6 +316,7 @@ class BitstreamCache:
         self.stats.evictions += len(self._store)
         self._store.clear()
         self._routes.clear()
+        self._specialized.clear()
 
 
 def aot_compile(fn: Callable[..., Any], abstract_args: tuple,

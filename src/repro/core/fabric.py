@@ -65,6 +65,24 @@ class ResidentAccelerator:
     # is placement-free).  `relocations` counts moves since admission.
     admit_generation: int = -1
     relocations: int = 0
+    # tiered route specialization (DESIGN.md §7): which artifact tier this
+    # resident's dispatch records point at.  `routes` is the device-resident
+    # hop vector (built ONCE at admit/relocate, never on the dispatch path);
+    # `zero_hop` caches whether the placement is pass-through-free (instant
+    # specialization eligibility); `stable_dispatches` counts hits since the
+    # routes last changed (the stability trigger); `spec_pending`/`spec_job`
+    # track an in-flight background specialize compile.  `live` flips False
+    # on release so lock-free dispatch records invalidate with ONE read.
+    tier: str = "generic"
+    routes: Any = None
+    zero_hop: bool = False
+    stable_dispatches: int = 0
+    spec_pending: bool = False
+    spec_job: str | None = None
+    spec_fn: Any = None            # bound specialized executable (dispatch)
+    spec_jit_kwargs: Any = None    # the jit kwargs it was compiled under
+    spec_failures: int = 0         # failed spec compiles at these routes
+    live: bool = True
 
 
 def _occupants_of(graph: Graph, placement: Placement) -> dict[Coord, tuple[TileClass, ...]]:
@@ -193,6 +211,12 @@ class Fabric:
             self._tick += 1
             res.last_used = self._tick
 
+    def touch_resident(self, res: ResidentAccelerator) -> None:
+        """Recency bump without the rid lookup — the dispatch fast path
+        already holds the resident via its immutable dispatch record."""
+        self._tick += 1
+        res.last_used = self._tick
+
     def admit(self, rid: str, name: str, graph: Graph, placement: Placement,
               program: Program, *,
               tile_budget: int | None = None,
@@ -240,10 +264,15 @@ class Fabric:
 
     def release(self, rid: str) -> ResidentAccelerator | None:
         """Free one resident's PR regions; returns it (for bitstream cleanup)."""
-        return self._residents.pop(rid, None)
+        res = self._residents.pop(rid, None)
+        if res is not None:
+            res.live = False          # dispatch records invalidate instantly
+        return res
 
     def release_all(self) -> list[ResidentAccelerator]:
         out = list(self._residents.values())
+        for res in out:
+            res.live = False
         self._residents.clear()
         return out
 
@@ -297,6 +326,21 @@ class Fabric:
         res.generation = self._generation
         res.relocations += 1
         res.acc = None                # routes changed — rebind (cheap)
+        # the move invalidates the route-constant tier INSTANTLY: the routes
+        # this resident was specialized for no longer describe its tiles.
+        # This is THE tier-reset point — Overlay._despecialize (called just
+        # before relocating) does the overlay-side bookkeeping (cancel the
+        # spec job, drop cached artifacts, count the despecialization) and
+        # relies on this reset rather than duplicating it.
+        res.tier = "generic"
+        res.routes = None
+        res.zero_hop = False
+        res.stable_dispatches = 0
+        res.spec_pending = False
+        res.spec_job = None
+        res.spec_fn = None
+        res.spec_jit_kwargs = None
+        res.spec_failures = 0         # new routes: specialization may retry
         return res
 
     # -- metrics --------------------------------------------------------------
@@ -331,6 +375,9 @@ class Fabric:
                           "downloads": res.downloads,
                           "download_cost": round(res.download_cost, 6),
                           "relocations": res.relocations,
+                          "tier": res.tier,
+                          "zero_hop": res.zero_hop,
+                          "specializing": res.spec_pending,
                           "last_used": res.last_used}
                 for res in self.lru_order()
             },

@@ -28,6 +28,17 @@ every placement of a graph.  Moving a resident to new tiles re-emits only
 the routes vector (and the controller route program); the expensive XLA
 compile — the paper's PR bitstream download — is never repaid.
 
+Tiered route specialization (DESIGN.md §7): the generic relocatable kernel
+pays ``fori_loop``/``optimization_barrier`` *structure* on every edge even
+when the placement is contiguous and all hop trip counts are zero at
+runtime.  :func:`specialize_kernel` builds the second artifact tier — a
+**route-constant** kernel in which the hop counts are baked in as Python
+ints at trace time, so pass-through-free edges vanish entirely and XLA
+fully fuses the body (the paper's application-specialized bitstream,
+recovering "dynamic ≈ fully custom" on the steady-state serving path).
+The specialized executable is valid for exactly one routes vector; any
+relocation despecializes back to the always-correct generic kernel.
+
 The assembled callable is pure and traceable: it can be jitted, differentiated,
 lowered and AOT-compiled (then held in the BitstreamCache).
 """
@@ -146,6 +157,9 @@ class AssembledAccelerator:
     # per-edge hop vector.  ``fn`` == kernel with routes bound.
     kernel: Callable[..., Any] | None = None
     routes: Any = None
+    # artifact tier this accelerator dispatches to: "generic" (relocatable,
+    # routes as a runtime argument) or "specialized" (route-constant)
+    tier: str = "generic"
 
     def __call__(self, *args):
         return self.fn(*args)
@@ -171,6 +185,22 @@ def route_vector(graph: Graph, placement: Placement) -> Any:
 def bind_routes(kernel: Callable[..., Any], routes: Any) -> Callable[..., Any]:
     """Close a placement-invariant kernel over one placement's routes."""
     return partial(kernel, routes)
+
+
+def route_hops(graph: Graph, placement: Placement) -> tuple[int, ...]:
+    """The routes vector as host Python ints (same :func:`edge_order` order)
+    — the constant half a route-specialized kernel bakes in at trace time."""
+    hops = placement.edge_hops
+    return tuple(int(hops.get(e, 0)) for e in edge_order(graph))
+
+
+def zero_hop(hops: "tuple[int, ...] | Any") -> bool:
+    """Whether a hop vector implies NO pass-through work: every edge is
+    co-located (0) or nearest-neighbour (1), so each generic ``fori_loop``
+    runs zero trips.  This is the contiguous steady state ``defragment()``
+    produces — the placements where route specialization deletes every last
+    bit of routing structure from the compiled body."""
+    return all(int(h) <= 1 for h in hops)
 
 
 def _dyn_barrier_hops(v, h):
@@ -256,6 +286,171 @@ def build_kernel(graph: Graph, *,
     return kernel
 
 
+def _opaque_one(routes) -> Any:
+    """An f32 scalar that is exactly 1.0 at runtime but OPAQUE to every
+    compiler layer: derived from the runtime ``routes`` argument through
+    float arithmetic (``convert(r0) * 0.0 + 1.0``) that neither XLA's
+    simplifier nor LLVM may fold (``x * 0.0`` is not an identity under
+    IEEE; routes are ints, so the result can never be NaN/Inf-poisoned).
+    See :func:`_static_barrier_hops` for why specialization needs it."""
+    return routes[0].astype(jnp.float32) * 0.0 + 1.0
+
+
+# Library operators whose result can never be a bare LLVM ``fmul`` (safe
+# TAILS: fusing straight across their output edge cannot form an FMA), and
+# operators that never begin by ``fadd``/``fsub``-ing an operand (safe
+# HEADS).  Everything NOT listed — ``mul`` itself, ``neg`` (LLVM rewrites
+# fneg∘fmul into an fmul), ``pow[..]``, reductions, shape movers
+# (transparent to the fusion emitter), traced-residue and custom-kernel
+# nodes — is conservatively treated as contraction-prone.
+_CONTRACTION_SAFE_TAILS = frozenset({
+    "add", "sub", "div", "max", "min", "abs", "relu", "sigmoid", "silu",
+    "gelu", "sqrtf", "sin", "cos", "log", "exp", "rsqrt", "tanh",
+    "gt", "lt", "ge", "le", "eq", "ne"})
+_CONTRACTION_SAFE_HEADS = frozenset({
+    "mul", "div", "max", "min", "neg", "abs", "relu", "sigmoid", "silu",
+    "gelu", "sqrtf", "sin", "cos", "log", "exp", "rsqrt", "tanh",
+    "gt", "lt", "ge", "le", "eq", "ne"})
+
+
+def _contraction_guard_needed(producer, consumer) -> bool:
+    """Whether fusing straight across the (producer → consumer) edge could
+    let LLVM contract a cross-node mul+add pair into an FMA — the one
+    fusion-dependent rounding change.  The generic tier's per-edge loops
+    are fusion boundaries, so an unguarded contraction would make the
+    specialized tier drift from it by ULPs."""
+    if producer.kind in ("input", "const", "select"):
+        return False                 # parameters/constants/selects: no fmul
+    pname = producer.op.name if producer.op is not None else ""
+    if pname in _CONTRACTION_SAFE_TAILS:
+        return False
+    if consumer.kind == "select":
+        return False                 # llvm select: no fadd on the operand
+    cname = consumer.op.name if consumer.kind == "op" and \
+        consumer.op is not None else ""
+    return cname not in _CONTRACTION_SAFE_HEADS
+
+
+def _static_barrier_hops(one) -> Callable[[Any, int, bool], Any]:
+    """Route-constant local mode: ``h`` is a Python int at trace time, so
+    the generic tier's per-edge ``fori_loop``/dynamic-trip-count carcass is
+    gone and XLA fuses the whole body into one kernel.  Pass-through-free
+    edges (``h <= 1``) vanish entirely unless they need the exactness
+    guard; ``h >= 2`` edges keep their h-1 physical copy passes (the
+    pass-through cost model), now statically unrolled.
+
+    The guard preserves bit-identity across tiers: the generic kernel's
+    zero-trip loops are *fusion boundaries*, and without them LLVM
+    contracts cross-node ``mul``+``add`` pairs into FMAs, drifting by
+    ULPs.  Guarded edges multiply by ``one`` — the runtime-opaque exact
+    1.0 — so any contraction instead computes ``fma(x, 1.0, c) ==
+    round(x + c)``: exact, and the fused specialized body reproduces the
+    generic tier bit for bit.  Non-float edges cannot contract."""
+    def hop_fn(v, h: int, guard: bool):
+        def one_leaf(leaf):
+            if not jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
+                return leaf
+            passes = h - 1 if h >= 2 else (1 if guard else 0)
+            if passes:
+                edge_one = one.astype(leaf.dtype)
+                for _ in range(passes):
+                    leaf = leaf * edge_one
+            return leaf
+
+        return jax.tree.map(one_leaf, v)
+
+    return hop_fn
+
+
+def _static_ici_hops(one, axis: str, n_dev: int
+                     ) -> Callable[[Any, int, bool], Any]:
+    """Route-constant sharded mode: ``h`` is static, so the forward ring
+    walk unrolls and the return permute is ONE static ``ppermute`` (no
+    ``fori_loop``, no ``switch`` over every possible shift).  A zero-hop
+    guarded edge keeps the opaque-one multiply (the generic tier's
+    ``switch`` is a fusion boundary there; see
+    :func:`_static_barrier_hops`); hopped edges end in a ``ppermute``,
+    a boundary in both tiers."""
+    ring = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def hop_fn(v, h: int, guard: bool):
+        def one_leaf(leaf):
+            if h == 0:
+                if guard and jnp.issubdtype(jnp.result_type(leaf),
+                                            jnp.floating):
+                    leaf = leaf * one.astype(leaf.dtype)
+                return leaf
+            for _ in range(h):
+                leaf = jax.lax.ppermute(leaf, axis, perm=ring)
+            k = h % n_dev
+            if k:
+                back = [(i, (i - k) % n_dev) for i in range(n_dev)]
+                leaf = jax.lax.ppermute(leaf, axis, perm=back)
+            return leaf
+
+        return jax.tree.map(one_leaf, v)
+
+    return hop_fn
+
+
+def specialize_kernel(graph: Graph, hops: "tuple[int, ...]", *,
+                      hop_factory: "Callable[[Any], Callable[[Any, int], Any]] | None" = None
+                      ) -> Callable[..., Any]:
+    """The route-CONSTANT compute body — the specialized artifact tier.
+
+    Same DFG walk and calling convention as :func:`build_kernel`
+    (``kernel(routes, *inputs)``), but every edge's hop count is the Python
+    int ``hops[edge_index]`` (:func:`route_hops`) baked in at trace time:
+    no hop count is ever READ from the runtime routes vector, so the
+    ``fori_loop`` routing structure vanishes and XLA fuses the whole body.
+    The routes argument survives only as the seed of the opaque exact-1.0
+    guarding contraction-prone edges (:func:`_contraction_guard_needed`) —
+    on a guard-free contiguous graph it is entirely unused and XLA drops
+    the parameter.  Keeping one calling convention across tiers also means
+    donation kwargs, route binding and dispatch records need no per-tier
+    cases.
+
+    The compiled executable is the paper's *application-specialized*
+    bitstream: valid for exactly one hop vector, bit-identical to the
+    generic relocatable kernel, and despecialized (dropped) the moment the
+    resident's routes change.
+    """
+    nodes = graph.toposorted()
+    by_id = {n.node_id: n for n in nodes}
+    order = edge_order(graph)
+    if len(hops) != len(order):
+        raise ValueError(
+            f"hop vector has {len(hops)} entries for {len(order)} edges")
+    static_hops = {e: int(h) for e, h in zip(order, hops)}
+    guards = {e: _contraction_guard_needed(by_id[e[0]], by_id[e[1]])
+              for e in order}
+    needs_one = any(g or static_hops[e] >= 2 for e, g in guards.items())
+    factory = hop_factory or _static_barrier_hops
+
+    def kernel(routes, *inputs):
+        hop = factory(_opaque_one(routes) if needs_one else None)
+        vals: dict[int, Any] = dict(zip(graph.input_ids, inputs))
+        for n in nodes:
+            if n.kind == "input":
+                continue
+            if n.kind == "const":
+                vals[n.node_id] = n.payload
+                continue
+            args = []
+            for src in n.inputs:
+                e = (src, n.node_id)
+                args.append(hop(vals[src], static_hops[e], guards[e]))
+            if n.kind == "op":
+                vals[n.node_id] = n.op.fn(*args)
+            elif n.kind == "select":
+                p, t, e = args
+                vals[n.node_id] = jnp.where(p, t, e)
+        outs = tuple(vals[i] for i in graph.output_ids)
+        return outs[0] if len(outs) == 1 else outs
+
+    return kernel
+
+
 def assemble(graph: Graph, placement: Placement, *,
              program: Program | None = None,
              routes: Any = None) -> AssembledAccelerator:
@@ -324,3 +519,24 @@ def wrap_sharded(acc: AssembledAccelerator, graph: Graph,
     """Ready-to-call jitted sharded accelerator for ``acc``'s own placement
     (the routes-bound convenience over :func:`wrap_sharded_kernel`)."""
     return bind_routes(wrap_sharded_kernel(acc, graph, mesh), acc.routes)
+
+
+def wrap_sharded_specialized(graph: Graph, hops: "tuple[int, ...]",
+                             mesh: jax.sharding.Mesh,
+                             axis: str = "tiles") -> Callable[..., Any]:
+    """shard_map + jit the route-CONSTANT kernel — the specialized artifact
+    tier for a sharded overlay: takes ``(routes, *inputs)`` like the
+    generic tier, but each static hop is an unrolled ``ppermute`` (no
+    ``fori_loop``, no return ``switch``)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    n_dev = mesh.shape[axis]
+    kernel = specialize_kernel(
+        graph, hops,
+        hop_factory=lambda one: _static_ici_hops(one, axis, n_dev))
+    n_in = len(graph.input_ids)
+    smapped = shard_map(kernel, mesh=mesh, in_specs=(P(),) * (n_in + 1),
+                        out_specs=P(), check_vma=False)
+    return jax.jit(smapped)

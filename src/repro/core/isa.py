@@ -14,6 +14,13 @@ body* (:func:`compile_compute` — LD/VEXEC/SELECT/ST, tile bindings open) and
 a cheap *route program* (:func:`compile_routes` — the ROUTE/BYPASS
 interconnect a placement implies).  :func:`compile_graph` weaves the two into
 the full controller program; relocating a resident re-emits only the routes.
+
+Route-constant specialization (DESIGN.md §7): a *specialized* bitstream has
+its interconnect baked into the instruction BRAM image at synthesis time, so
+the controller no longer programs routes per dispatch.
+:func:`compile_specialized` emits that program — one ``LD_INSTR`` carrying
+the folded hop constants, then the tile-bound compute body, and **zero**
+per-dispatch ROUTE/BYPASS instructions regardless of placement.
 """
 
 from __future__ import annotations
@@ -219,6 +226,33 @@ def compile_routes(graph: Graph, placement: Placement) -> Program:
         if node.kind == "op":
             _emit_node_routes(node, assign, ins.append)
     return Program(f"{graph.name}@routes", ins)
+
+
+def compile_specialized(graph: Graph, placement: Placement) -> Program:
+    """The route-constant controller program of a *specialized* bitstream.
+
+    The placement's interconnect is folded into the instruction BRAM image —
+    represented by one leading ``LD_INSTR`` whose ``meta`` carries the baked
+    per-edge hop constants — so dispatch executes only the tile-bound
+    compute body.  No ROUTE/BYPASS instructions are emitted for ANY
+    placement: on a contiguous (pass-through-free) layout the program is the
+    compute body plus the one load, the "zero-hop fused bitstream".
+    """
+    graph.validate()
+    assign = placement.assignment
+    baked = tuple(sorted(placement.edge_hops.items()))
+    ins: list[Instruction] = [
+        Instruction(Opcode.LD_INSTR, meta=("route-const", baked))]
+    emit = ins.append
+    for node in graph.toposorted():
+        if node.kind in ("op", "select"):
+            _emit_node_compute(node, emit, tile=assign.get(node.node_id))
+        else:
+            _emit_node_compute(node, emit)
+    for out in graph.output_ids:
+        emit(Instruction(Opcode.ST_STREAM, srcs=(out,), meta="out"))
+    emit(Instruction(Opcode.BARRIER))
+    return Program(f"{graph.name}@specialized", ins)
 
 
 def compile_graph(graph: Graph, placement: Placement) -> Program:

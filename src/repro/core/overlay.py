@@ -31,6 +31,15 @@ Also provided, mirroring the paper's runtime controls:
 * ``Overlay.defragment()`` / ``Overlay.relocate(graph, placement)`` — move
   residents between placements *without* re-downloading: compiled kernel
   artifacts are placement-free (DESIGN.md §6), only route programs re-emit,
+* tiered route specialization (DESIGN.md §7) — stable/contiguous residents
+  are background-compiled into a *route-constant* specialized executable
+  (hop counts baked in; zero-hop edges vanish, XLA fully fuses the body)
+  on the scheduler's low-priority lane and atomically swapped onto the
+  dispatch fast path; any relocation instantly despecializes back to the
+  always-correct generic kernel.  ``jitted.specialize(*args)`` requests the
+  tier eagerly.  Dispatch itself is lock-light: per-entry immutable
+  dispatch records revalidated by a single generation read — no
+  ``Overlay._lock`` acquisition on a resident hit,
 * ``Overlay.assemble(graph)``   — the low-level IR path (hand-built Graphs),
   still public, idempotent and cached: re-assembling the same graph signature
   is a cache *hit* (the paper's "only incurred at startup").
@@ -50,6 +59,7 @@ import weakref
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
 from repro.core import interpreter as interp
@@ -88,6 +98,23 @@ class OverlayStats:
     stale_downloads: int = 0    # background results dropped (generation flushed)
 
 
+@dataclasses.dataclass(frozen=True)
+class _DispatchRecord:
+    """Immutable snapshot the lock-light dispatch fast path runs on.
+
+    Built whenever an entry's executable (re)binds — assembly, background
+    swap, relocation rebind, specialize commit — and validated per call by
+    a SINGLE generation read against the resident it points at: no fabric
+    rid lookup, no ``Overlay._lock``.  Any residency change (evict, reclaim,
+    relocate, reconfigure) bumps/kills the generation, so a stale record
+    fails closed into the slow path, which rebuilds it."""
+
+    fn: Callable[..., Any]               # ready-to-call bound executable
+    res: "ResidentAccelerator"           # the resident it belongs to
+    generation: int                      # validity = res.live && gen match
+    tier: str                            # "generic" | "specialized"
+
+
 @dataclasses.dataclass
 class _JitEntry:
     """One (signature, static-args) instantiation of a jitted function."""
@@ -100,6 +127,7 @@ class _JitEntry:
     pending: DownloadHandle | None = None     # in-flight background download
     jit_kwargs: dict[str, Any] | None = None  # last demand's kwargs (donation)
     download_failures: int = 0                # consecutive failed compiles
+    record: _DispatchRecord | None = None     # lock-light hot-path snapshot
 
 
 @dataclasses.dataclass
@@ -114,6 +142,24 @@ class _PendingDownload:
     avals: tuple
     jit_kwargs: dict[str, Any] | None = None   # the key includes these, so
                                                # the executable must honor them
+
+
+@dataclasses.dataclass
+class _PendingSpecialize:
+    """Frozen snapshot for a background route-constant compile.  Unlike a
+    download (``same_residency`` guard — kernels are placement-free), a
+    specialize commit validates the EXACT generation: the baked hop
+    constants describe one placement, so any relocation in flight makes the
+    result garbage and it must be dropped."""
+
+    rid: str
+    generation: int                    # exact — relocation invalidates
+    key: str                           # generic kernel key being specialized
+    spec_key: str                      # key + baked hop vector
+    graph: Graph
+    hops: tuple                        # Python-int hop vector (trace consts)
+    avals: tuple
+    jit_kwargs: dict[str, Any] | None = None
 
 
 class JitAssembled:
@@ -146,12 +192,15 @@ class JitAssembled:
 
     # -- signature handling ---------------------------------------------------
     @staticmethod
-    def _sig_key(dyn: tuple, static_repr: str) -> str:
+    def _sig_key(dyn: tuple, static_repr: str):
         """The entry-table key: flat abstract signature + pytree structure +
         static-argument values.  One definition — ``__call__``/``lower``/
-        ``prefetch`` must never disagree on it."""
-        return repr((cache_lib.signature_of(dyn),
-                     jax.tree_util.tree_structure(dyn), static_repr))
+        ``prefetch`` must never disagree on it.  A hashable tuple, NOT a
+        repr string: this runs on the dispatch fast path, where repr() of
+        shapes/dtypes would cost more than the dispatch itself."""
+        leaves, treedef = jax.tree_util.tree_flatten(dyn)
+        return (tuple(cache_lib.leaf_signature(a) for a in leaves),
+                treedef, static_repr)
 
     def _split(self, args: tuple):
         """Split positional args into (dynamic args, closed fn, static repr)."""
@@ -222,6 +271,7 @@ class JitAssembled:
                                       and handle.seconds > 0.0
                                       else time.perf_counter() - t0)
             entry.download_failures = 0
+            self.overlay._publish_record(entry)
         elif handle is not None and handle.error is not None:
             entry.download_failures += 1
             if entry.download_failures == 1:
@@ -280,6 +330,7 @@ class JitAssembled:
                                               tile_budget=self.tile_budget)
             entry.assemble_seconds = time.perf_counter() - t0
             entry.pending = None
+            self.overlay._publish_record(entry)
             return entry
         # asynchronous pipeline: serve from the fallback.  The download
         # itself is requested by ``__call__`` *after* the response is
@@ -366,8 +417,87 @@ class JitAssembled:
                 n += 1
         return n
 
+    def specialize(self, *args) -> DownloadHandle | None:
+        """Request the route-constant *specialized* tier for this signature
+        (DESIGN.md §7).  ``args`` may be concrete arrays or
+        ``jax.ShapeDtypeStruct`` pytrees.
+
+        On an asynchronous overlay the specialize compile is queued on the
+        scheduler's LOW lane (it never delays a download or relocation) and
+        the dispatch record swaps to the specialized executable when it
+        commits; on a synchronous overlay the compile is paid eagerly right
+        here.  Admits/downloads the generic tier first if needed.  A later
+        relocation instantly despecializes back to the generic kernel.
+        Returns the in-flight handle, or None (done inline / not needed).
+        """
+        ov = self.overlay
+        presplit = self._split(args)
+        dyn, closed, static_repr = presplit
+        entry = self._traced(self._sig_key(dyn, static_repr), closed, dyn)
+        acc = entry.acc
+        if acc is None or not ov.resident_current(acc):
+            if ov.async_downloads:
+                self.prefetch(*args)       # admit + download generic first
+            else:
+                self._entry(args, aot=True, _presplit=presplit)
+        if entry.jit_kwargs is None:
+            entry.jit_kwargs = self._jit_kwargs(args)
+        graph = entry.lowered.graph
+        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+        res = ov.fabric.get(ov._resident_key(graph, avals, self.fixed))
+        if res is None or res.tier != "generic" or res.spec_pending:
+            return None
+        if ov.async_downloads and not ov.scheduler.closed:
+            with ov._lock:
+                return ov._submit_specialize_locked(entry, res)
+        ov._specialize_now(entry, res)
+        return None
+
     def __call__(self, *args):
         presplit = self._split(args)
+        entry = self._entries.get(self._sig_key(presplit[0], presplit[2]))
+        if entry is not None:
+            rec = entry.record
+            if rec is not None:
+                res = rec.res
+                # the ENTIRE hot-path validation: liveness + one generation
+                # read (+ the wrapper's budget, when capped).  Anything that
+                # could invalidate the executable — evict, reclaim, flush,
+                # relocation, budget repack — changes one of these, and the
+                # stale record fails closed into the slow path below.
+                if res.live and res.generation == rec.generation and \
+                        (self.tile_budget is None
+                         or res.tile_budget == self.tile_budget):
+                    return self._dispatch_fast(entry, rec, res, presplit)
+        return self._call_slow(args, presplit)
+
+    def _dispatch_fast(self, entry: _JitEntry, rec: _DispatchRecord,
+                       res: ResidentAccelerator, presplit):
+        """Resident-hit dispatch without the overlay lock: recency bump,
+        tier bookkeeping, call.  Also the specialization trigger point —
+        a contiguous (zero-hop) or dispatch-stable generic resident queues
+        its route-constant compile on the scheduler's low lane."""
+        ov = self.overlay
+        ov.fabric.touch_resident(res)
+        if ov._prefetched:
+            ov._note_demand(res.rid)
+        if rec.tier == "specialized":
+            ov.cache.spec_stats.specialized_hits += 1
+        elif ov._auto_specialize and res.tier == "generic" \
+                and not res.spec_pending \
+                and res.spec_failures < _MAX_DOWNLOAD_FAILURES:
+            # the failure-cap read keeps a permanently-failing resident from
+            # re-acquiring the overlay lock on every dispatch forever
+            res.stable_dispatches += 1
+            if res.zero_hop or res.stable_dispatches >= ov.specialize_after:
+                ov._request_specialize(entry, res)
+        flat = jax.tree.leaves(presplit[0])
+        out = rec.fn(*flat)
+        n_out = len(entry.lowered.graph.output_ids)
+        leaves = list(out) if n_out > 1 else [out]
+        return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
+
+    def _call_slow(self, args, presplit):
         entry = self._entry(args, _presplit=presplit)
         ov = self.overlay
         acc = entry.acc
@@ -391,8 +521,16 @@ class JitAssembled:
             out = acc.fn(*flat)
             self._ensure_download(entry, args)
         else:
+            # a resident hit that missed the fast path (first dispatch, or
+            # a just-invalidated record): republish, then dispatch through
+            # the record so this call already serves the best live tier
+            ov._publish_record(entry)
+            rec = entry.record
+            fn = acc.fn if rec is None else rec.fn
+            if rec is not None and rec.tier == "specialized":
+                ov.cache.spec_stats.specialized_hits += 1
             flat = jax.tree.leaves(presplit[0])
-            out = acc.fn(*flat)
+            out = fn(*flat)
         n_out = len(entry.lowered.graph.output_ids)
         leaves = list(out) if n_out > 1 else [out]
         return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
@@ -429,6 +567,16 @@ class Overlay:
         age/re-download-cost ratio instead of pure LRU.  Defaults to
         following ``async_downloads`` (the pipeline measures real compile
         seconds; synchronous lazy mode has no meaningful costs to weigh).
+      auto_specialize: background-compile the route-constant *specialized*
+        tier for residents whose placement is contiguous (zero pass-through
+        hops) or whose routes have been stable for ``specialize_after``
+        dispatches, and swap the dispatch fast path onto it (DESIGN.md §7).
+        Specialize jobs ride the scheduler's LOW lane — strictly below
+        downloads and relocations.  Defaults to following
+        ``async_downloads``; ``jitted.specialize(*args)`` works either way.
+      specialize_after: dispatch-stability threshold for the non-contiguous
+        trigger (a placement that keeps its routes this many hits in a row
+        is worth baking them into).
     """
 
     def __init__(self, rows: int = 3, cols: int = 3, *,
@@ -440,7 +588,9 @@ class Overlay:
                  auto_defragment: bool = False,
                  async_downloads: bool = False,
                  download_workers: int = 1,
-                 cost_aware_reclaim: bool | None = None) -> None:
+                 cost_aware_reclaim: bool | None = None,
+                 auto_specialize: bool | None = None,
+                 specialize_after: int = 32) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
@@ -452,6 +602,12 @@ class Overlay:
         self.cost_aware_reclaim = (self.async_downloads
                                    if cost_aware_reclaim is None
                                    else bool(cost_aware_reclaim))
+        self._auto_specialize = (self.async_downloads
+                                 if auto_specialize is None
+                                 else bool(auto_specialize))
+        if specialize_after < 1:
+            raise ValueError("specialize_after must be >= 1")
+        self.specialize_after = int(specialize_after)
         self.scheduler = DownloadScheduler(workers=download_workers)
         self.stats = OverlayStats()
         self._last_placement: Placement | None = None
@@ -470,6 +626,28 @@ class Overlay:
         if rid in self._prefetched:
             self._prefetched.discard(rid)
             self.stats.prefetch_hits += 1
+
+    # -- lock-light dispatch records ------------------------------------------
+    def _publish_record(self, entry: _JitEntry) -> None:
+        """(Re)derive an entry's immutable dispatch record from its
+        assembled accelerator.  Picks the best live artifact tier: the
+        route-constant specialized executable when the resident carries one
+        for this entry's kernel key, else the generic routes-bound fn.  A
+        non-current residency publishes None (the slow path keeps serving
+        its fallback)."""
+        acc = entry.acc
+        rec = None
+        if acc is not None and acc.resident_id is not None:
+            res = self.fabric.get(acc.resident_id)
+            if res is not None and res.live \
+                    and res.generation == acc.generation:
+                fn, tier = acc.fn, "generic"
+                if res.tier == "specialized" and res.spec_fn is not None \
+                        and entry.jit_kwargs == res.spec_jit_kwargs:
+                    fn, tier = res.spec_fn, "specialized"
+                rec = _DispatchRecord(fn=fn, res=res,
+                                      generation=res.generation, tier=tier)
+        entry.record = rec
 
     # -- trace-based frontend -------------------------------------------------
     def jit(self, fn: Callable[..., Any] | None = None, *,
@@ -608,6 +786,7 @@ class Overlay:
         resident = self.fabric.admit(rid, graph.name, graph, placement,
                                      program, tile_budget=tile_budget,
                                      fixed=fixed)
+        self._bind_routes_eager(graph, resident)
         self.stats.downloads += 1
         # only a real re-place/download changes the fabric layout; a
         # resident hit dispatches to tiles already configured
@@ -617,14 +796,27 @@ class Overlay:
         self._last_placement = placement
         return resident
 
+    def _bind_routes_eager(self, graph: Graph,
+                           resident: ResidentAccelerator) -> None:
+        """Build the resident's routes vector ONCE, at admit/relocate time,
+        as a device-resident buffer — dispatch never reconstructs it or pays
+        the host→device transfer again (the hot path only ever *reads*
+        ``resident.routes``)."""
+        resident.routes = self.cache.route_program(
+            resident.rid, resident.placement.descriptor(),
+            lambda: jax.device_put(
+                interp.route_vector(graph, resident.placement)))
+        resident.zero_hop = interp.zero_hop(
+            interp.route_hops(graph, resident.placement))
+
     def _base_acc(self, graph: Graph,
                   resident: ResidentAccelerator) -> interp.AssembledAccelerator:
         """The un-jitted assembled accelerator for a resident (built once
         per placement; a relocation clears it and this rebinds — no XLA)."""
         if resident.acc is None:
-            routes = self.cache.route_program(
-                resident.rid, resident.placement.descriptor(),
-                lambda: interp.route_vector(graph, resident.placement))
+            if resident.routes is None:
+                self._bind_routes_eager(graph, resident)
+            routes = resident.routes
             if self.mesh is not None:
                 acc = interp.assemble_sharded(graph, resident.placement,
                                               self.mesh, self.tile_axis,
@@ -664,10 +856,15 @@ class Overlay:
         first post-move call already dispatches to the kernel."""
         res = self.fabric.get(rid)
         program = compile_graph(res.graph, placement)
+        # routes are about to change: the route-constant tier is garbage the
+        # moment they do — despecialize FIRST (instant, non-blocking; the
+        # generic kernel keeps serving), then rehome the tiles
+        self._despecialize(res)
         # old-placement route programs die with the move (bounds the side
         # table at ~one live entry per resident under sustained churn)
         self.cache.evict_routes(rid)
         res = self.fabric.relocate(rid, placement, program, ignore=ignore)
+        self._bind_routes_eager(res.graph, res)
         self.stats.relocations += 1
         if self.async_downloads and not self.scheduler.closed:
             gen = res.generation
@@ -707,7 +904,207 @@ class Overlay:
                         continue   # kernel still downloading — demand path
                     entry.acc = dataclasses.replace(
                         base, fn=interp.bind_routes(exe, base.routes))
+                    self._publish_record(entry)
             return base
+
+    # -- tiered route specialization (DESIGN.md §7) ---------------------------
+    def _request_specialize(self, entry: _JitEntry,
+                            res: ResidentAccelerator
+                            ) -> DownloadHandle | None:
+        """Dispatch-path trigger: queue a background route-constant compile
+        for one entry's resident.  Cheap pre-checks run lock-free; the
+        snapshot is built under the lock."""
+        if self.scheduler.closed:
+            return None
+        with self._lock:
+            return self._submit_specialize_locked(entry, res)
+
+    def _spec_snapshot_locked(self, entry: _JitEntry,
+                              res: ResidentAccelerator
+                              ) -> _PendingSpecialize | None:
+        """Validated [`_PendingSpecialize`] for (entry, res), or None when
+        specialization is impossible/pointless right now (caller holds the
+        lock).  One specialized variant per resident at a time; a resident
+        whose compile keeps failing stops being retried at these routes
+        (the cap resets on relocation — new routes, new chance)."""
+        if not res.live or res.tier != "generic" or res.spec_pending \
+                or res.spec_failures >= _MAX_DOWNLOAD_FAILURES:
+            return None
+        acc = entry.acc
+        if acc is not None and acc.resident_id != res.rid:
+            return None
+        graph = entry.lowered.graph
+        avals = tuple(graph.toposorted()[i].aval for i in graph.input_ids)
+        key = self._kernel_key(graph, avals, entry.jit_kwargs)
+        hops = interp.route_hops(graph, res.placement)
+        return _PendingSpecialize(
+            rid=res.rid, generation=res.generation, key=key,
+            spec_key=cache_lib.spec_key(key, hops), graph=graph, hops=hops,
+            avals=avals, jit_kwargs=entry.jit_kwargs)
+
+    def _submit_specialize_locked(self, entry: _JitEntry,
+                                  res: ResidentAccelerator
+                                  ) -> DownloadHandle | None:
+        pending = self._spec_snapshot_locked(entry, res)
+        if pending is None:
+            return None
+        res.spec_pending = True
+        res.spec_job = f"specialize:{pending.spec_key}"
+        return self.scheduler.submit(
+            res.spec_job,
+            lambda: self._compile_specialized_tier(pending),
+            lambda exe, dt: self._commit_specialized(pending, exe, dt),
+            on_done=lambda result, h: self._spec_settled(pending, result, h),
+            kind="specialize", low=True)
+
+    def _spec_settled(self, pending: _PendingSpecialize, result,
+                      handle: DownloadHandle) -> None:
+        """Observer for background specialize jobs: a compile that FAILED
+        (or was dropped) must not leave the resident wedged in
+        ``spec_pending`` — the trigger paths all gate on it.  Failures are
+        counted and capped (the generic tier keeps serving regardless)."""
+        if result is not None:
+            return                       # committed: state already settled
+        with self._lock:
+            res = self.fabric.get(pending.rid)
+            if res is None or res.generation != pending.generation:
+                return                   # relocated/evicted: already reset
+            res.spec_pending = False
+            res.spec_job = None
+            if handle.error is not None:
+                res.spec_failures += 1
+                if res.spec_failures == 1:
+                    warnings.warn(
+                        f"background specialization for {res.name!r} failed "
+                        f"({handle.error!r}); the generic kernel keeps "
+                        f"serving. Giving up after "
+                        f"{_MAX_DOWNLOAD_FAILURES} attempts.",
+                        RuntimeWarning, stacklevel=2)
+
+    def _specialize_now(self, entry: _JitEntry,
+                        res: ResidentAccelerator) -> Any:
+        """Synchronous specialization (deterministic overlays, explicit
+        ``jitted.specialize``): pay the route-constant compile on the caller
+        and commit — same generation guard as the background path."""
+        with self._lock:
+            pending = self._spec_snapshot_locked(entry, res)
+            if pending is None:
+                return None
+            res.spec_pending = True
+            res.spec_job = f"specialize:{pending.spec_key}"
+        t0 = time.perf_counter()
+        try:
+            exe = self._compile_specialized_tier(pending)
+        except BaseException:
+            with self._lock:
+                if self.fabric.is_current(pending.rid, pending.generation):
+                    res.spec_pending = False
+                    res.spec_job = None
+                    res.spec_failures += 1
+            raise
+        return self._commit_specialized(pending, exe,
+                                        time.perf_counter() - t0)
+
+    def _compile_specialized_tier(self, pending: _PendingSpecialize):
+        """The expensive half of a specialization — eager XLA compile of the
+        route-CONSTANT kernel (hop counts baked in at trace time; the
+        routes argument survives only as the bit-exactness seed).  Runs on
+        a scheduler worker (low lane) or the explicit caller; no locks
+        held.
+
+        Returns a WARMED ``jax.jit`` callable, not a ``jax.stages.Compiled``:
+        the whole point of this tier is per-call latency, and Compiled
+        dispatches through a slow Python path while a warm jit function
+        rides the C++ fast path.  Warming = one throwaway execution on
+        zero inputs, which pays the XLA compile here in the background."""
+        if self.mesh is not None:
+            jitted = interp.wrap_sharded_specialized(
+                pending.graph, pending.hops, self.mesh, self.tile_axis)
+        else:
+            kernel = interp.specialize_kernel(pending.graph, pending.hops)
+            jitted = jax.jit(
+                kernel, **cache_lib.kernel_jit_kwargs(pending.jit_kwargs))
+        routes_aval = jax.ShapeDtypeStruct((len(pending.hops),), "int32")
+        zeros = [jnp.zeros(a.shape, a.dtype)
+                 for a in (routes_aval,) + pending.avals]
+        jax.block_until_ready(jitted(*zeros))    # compile + warm the cache
+        return jitted
+
+    def _commit_specialized(self, pending: _PendingSpecialize, exe,
+                            seconds: float):
+        """Publish a finished route-constant compile — generation-guarded
+        like a download commit, but against the EXACT generation: a
+        relocation in flight changed the routes the constants were baked
+        from, so the late specialization is dropped (the resident already
+        despecialized to the generic kernel; nothing blocks, nothing is
+        evicted)."""
+        with self._lock:
+            if not self.fabric.is_current(pending.rid, pending.generation):
+                self.cache.spec_stats.dropped_stale += 1
+                return None
+            res = self.fabric.get(pending.rid)
+            self.cache.insert_specialized(pending.spec_key, exe, seconds)
+            self.fabric.add_cache_key(pending.rid, pending.key)
+            res.tier = "specialized"
+            res.spec_pending = False
+            res.spec_job = None
+            # atomic swap: every live entry of this rid/kernel-key starts
+            # dispatching the specialized executable on its next call
+            fn = interp.bind_routes(exe, res.routes)
+            res.spec_fn = fn
+            res.spec_jit_kwargs = pending.jit_kwargs
+            for wrapper in list(self._wrappers):
+                for entry in list(wrapper._entries.values()):
+                    acc = entry.acc
+                    if acc is None or acc.resident_id != pending.rid \
+                            or acc.generation != res.generation \
+                            or entry.jit_kwargs != pending.jit_kwargs:
+                        continue
+                    entry.record = _DispatchRecord(
+                        fn=fn, res=res, generation=res.generation,
+                        tier="specialized")
+            return exe
+
+    def _despecialize(self, res: ResidentAccelerator) -> None:
+        """Overlay-side half of despecialization (caller holds the lock,
+        and MUST follow up with ``Fabric.relocate`` — the single tier-reset
+        point): cancel any in-flight specialize job, drop the resident's
+        route-constant artifacts, book the despecialization.  Dispatch
+        records pointing at the specialized executable die with the
+        relocation's generation bump — no blocking, no eviction."""
+        if res.spec_job is not None:
+            self.scheduler.cancel(res.spec_job)
+        self._drop_spec_artifacts(res)
+        if res.tier == "specialized":
+            self.cache.spec_stats.despecializations += 1
+
+    def _drop_spec_artifacts(self, res: ResidentAccelerator) -> None:
+        """Drop exactly THIS resident's route-constant executables (caller
+        holds the lock).  Spec keys include the hop vector, so a sibling
+        resident sharing the kernel key at different routes keeps its own
+        variant — and conversely a specialized artifact never outlives the
+        resident it was baked for."""
+        hops = interp.route_hops(res.graph, res.placement)
+        for k in res.cache_keys:
+            self.cache.drop_specialized_exact(cache_lib.spec_key(k, hops))
+
+    def _enqueue_contiguous_specializations(self) -> None:
+        """Post-defragment hook (caller holds the lock): residents whose
+        placement became contiguous (pass-through-free) queue their
+        route-constant tier on the low lane — the steady state after
+        compaction should serve zero-hop fused bitstreams."""
+        if not (self._auto_specialize and self.async_downloads) \
+                or self.scheduler.closed:
+            return
+        for wrapper in list(self._wrappers):
+            for entry in list(wrapper._entries.values()):
+                acc = entry.acc
+                if acc is None or acc.resident_id is None:
+                    continue
+                res = self.fabric.get(acc.resident_id)
+                if res is None or not res.zero_hop:
+                    continue
+                self._submit_specialize_locked(entry, res)
 
     def repack(self, rid: str, tile_budget: int | None) -> bool:
         """Re-place a resident under a changed footprint cap via relocation.
@@ -996,6 +1393,13 @@ class Overlay:
         # right to commit (and the generation guard backstops the race)
         self.scheduler.cancel(rid)
         self.scheduler.cancel(f"relocate:{rid}")
+        if resident.spec_job is not None:
+            self.scheduler.cancel(resident.spec_job)
+        # the route-constant tier dies with its resident even when the
+        # generic kernel key survives via a sharing sibling
+        self._drop_spec_artifacts(resident)
+        if resident.tier == "specialized":
+            self.cache.spec_stats.despecializations += 1
         self._prefetched.discard(rid)
         self.stats.evictions += 1
         self.cache.evict_routes(rid)
@@ -1091,6 +1495,9 @@ class Overlay:
             moved += 1
         if moved:
             self.stats.defrags += 1
+            # compaction's whole point is the contiguous steady state:
+            # queue the zero-hop fused tier for residents that reached it
+            self._enqueue_contiguous_specializations()
         return moved
 
     def reconfigure(self, *, policy: PlacementPolicy | None = None,
@@ -1178,6 +1585,12 @@ class Overlay:
             "cached_bitstreams": len(self.cache),
             "route_programs": self.cache.route_programs(),
             "routes": dataclasses.asdict(self.cache.route_stats),
+            "specialization": {
+                **dataclasses.asdict(self.cache.spec_stats),
+                "specialized_artifacts": self.cache.specialized_count(),
+                "auto": self._auto_specialize,
+                "specialize_after": self.specialize_after,
+            },
             "fabric": self.fabric.describe(),
             "assemblies": self.stats.assemblies,
             "reconfigurations": self.stats.reconfigurations,

@@ -18,6 +18,11 @@ The scheduler is deliberately mechanism-only; policy lives in
   lock and validate residency (``Fabric.is_current``) before publishing —
   the scheduler treats a ``None``/falsy commit result as *stale* and counts
   it dropped.  ``on_done`` observers receive the committed value (or None).
+* three dispatch lanes: ``priority=True`` jumps the queue front (relocation
+  rebinds), the default FIFO lane carries downloads, and ``low=True`` is the
+  *background-optimization* lane (route specialization): a low job is only
+  ever started when NOTHING is queued in the upper lanes, so a pending
+  download or relocation is never delayed by a specialize compile.
 * submissions **coalesce** by key: a second submit while the first is
   queued/running attaches its observer instead of downloading twice.
 * ``cancel(key)`` — a queued job never runs; a running job loses its right
@@ -73,6 +78,7 @@ class SchedulerStats:
     cancelled: int = 0        # dequeued before running
     failed: int = 0           # work() raised
     priority_jobs: int = 0    # jobs that jumped the queue (relocation commits)
+    low_jobs: int = 0         # background-lane jobs (route specialization)
     download_seconds: float = 0.0   # total background work time
 
 
@@ -123,6 +129,7 @@ class DownloadScheduler:
         self.stats = SchedulerStats()         # from abandoned overlays)
         self._cond = threading.Condition()
         self._queue: collections.deque[_Job] = collections.deque()
+        self._low: collections.deque[_Job] = collections.deque()   # spec lane
         self._jobs: dict[str, _Job] = {}      # queued or running, by key
         self._finishing = 0                   # jobs delivering observer calls
         self._threads: list[threading.Thread] = []
@@ -133,7 +140,8 @@ class DownloadScheduler:
     def submit(self, key: str, work: Callable[[], Any],
                commit: Callable[[Any, float], Any], *,
                on_done: "Callable[[Any, DownloadHandle], None] | None" = None,
-               kind: str = "demand", priority: bool = False) -> DownloadHandle:
+               kind: str = "demand", priority: bool = False,
+               low: bool = False) -> DownloadHandle:
         """Enqueue ``work`` (worker thread) followed by ``commit`` (same
         thread; must validate + publish).  Same-key submits while the first
         is in flight coalesce onto it.  ``on_done`` observers are invoked as
@@ -142,7 +150,12 @@ class DownloadScheduler:
 
         ``priority=True`` puts the job at the *front* of the queue — for
         cheap generation-guarded relocation commits (re-emit routes, rebind
-        the cached kernel) that must never wait behind a full XLA compile."""
+        the cached kernel) that must never wait behind a full XLA compile.
+        ``low=True`` routes the job to the background-optimization lane:
+        workers only pick it up while the main queue is EMPTY, so a pending
+        download/relocation is never delayed by it (route specialization)."""
+        if priority and low:
+            raise ValueError("a job cannot be both priority and low")
         handle = DownloadHandle(key=key, kind=kind)
         with self._cond:
             if self._shutdown:
@@ -159,6 +172,9 @@ class DownloadScheduler:
             if priority:
                 self._queue.appendleft(job)
                 self.stats.priority_jobs += 1
+            elif low:
+                self._low.append(job)
+                self.stats.low_jobs += 1
             else:
                 self._queue.append(job)
             self.stats.submitted += 1
@@ -187,11 +203,15 @@ class DownloadScheduler:
                 return False
             job.stale = True
             if job.state == _QUEUED:
-                try:
-                    self._queue.remove(job)
-                except ValueError:      # pragma: no cover - already popped
-                    pass
-                else:
+                dequeued = False
+                for lane in (self._queue, self._low):
+                    try:
+                        lane.remove(job)
+                        dequeued = True
+                        break
+                    except ValueError:  # pragma: no cover - already popped
+                        pass
+                if dequeued:
                     job.state = _CANCELLED
                     del self._jobs[key]
                     self.stats.cancelled += 1
@@ -256,7 +276,7 @@ class DownloadScheduler:
         while True:
             with self._cond:
                 deadline = time.monotonic() + self.idle_timeout
-                while not self._queue and not self._shutdown:
+                while not self._queue and not self._low and not self._shutdown:
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         # idle expiry: abandoned overlays must not pin a
@@ -267,9 +287,12 @@ class DownloadScheduler:
                             pass
                         return
                     self._cond.wait(remaining)
-                if self._shutdown and not self._queue:
+                if self._shutdown and not self._queue and not self._low:
                     return
-                job = self._queue.popleft()
+                # strict lane order: the low (specialization) lane is only
+                # drained while NO download/relocation is waiting
+                job = (self._queue.popleft() if self._queue
+                       else self._low.popleft())
                 job.state = _RUNNING
                 for handle, _ in job.handles:
                     handle.status = _RUNNING

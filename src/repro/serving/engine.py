@@ -110,12 +110,17 @@ class ServeEngine:
     def _prefetch_decode(self) -> None:
         """Hide the decode download behind prefill: request it once, as soon
         as traffic arrives (async overlays only — on a synchronous overlay
-        the first decode tick pays its download as before)."""
+        the first decode tick pays its download as before).  Decode is the
+        per-token serving hot path, so the engine also requests its
+        route-constant *specialized* tier eagerly (DESIGN.md §7): the low-
+        lane compile lands behind the generic download, and every
+        subsequent tick dispatches the zero-hop fused executable."""
         if self._decode_prefetched or self.overlay is None or \
                 not getattr(self.overlay, "async_downloads", False):
             return
         self._decode_prefetched = True
         self._decode.prefetch(self.params, self.cur_tokens, self.caches)
+        self._decode.specialize(self.params, self.cur_tokens, self.caches)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:

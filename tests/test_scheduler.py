@@ -81,6 +81,48 @@ def test_scheduler_flush_stales_running_job():
     assert s.stats.dropped_stale == 1 and s.stats.completed == 0
 
 
+def test_low_lane_never_delays_normal_downloads():
+    # the route-specialization invariant: with the single worker pinned by a
+    # running download, a queued LOW job must yield to every download that
+    # arrives after it — a pending download is never delayed by a
+    # specialization
+    s = DownloadScheduler(workers=1)
+    gate = threading.Event()
+    order = []
+
+    def committer(name):
+        return lambda r, dt: (order.append(name), name)[1]
+
+    s.submit("A", lambda: gate.wait(10), committer("A"))
+    s.submit("spec", lambda: "bits", committer("spec"), low=True)
+    s.submit("B", lambda: "b", committer("B"))
+    s.submit("C", lambda: "c", committer("C"))
+    assert s.stats.low_jobs == 1 and s.stats.submitted == 4
+    gate.set()
+    assert s.drain(10)
+    assert order == ["A", "B", "C", "spec"]
+
+
+def test_priority_and_low_are_mutually_exclusive():
+    s = DownloadScheduler()
+    with pytest.raises(ValueError):
+        s.submit("k", lambda: 1, lambda r, dt: r, priority=True, low=True)
+
+
+def test_cancel_dequeues_low_lane_job():
+    s = DownloadScheduler(workers=1)
+    gate = threading.Event()
+    s.submit("A", lambda: gate.wait(10), lambda r, dt: r)
+    observed = []
+    s.submit("spec", lambda: "never-runs", lambda r, dt: "never",
+             on_done=lambda r, h: observed.append(r), low=True)
+    assert s.cancel("spec")
+    gate.set()
+    assert s.drain(10)
+    assert observed == [None]
+    assert s.stats.cancelled == 1
+
+
 def test_scheduler_failed_work_reports_error():
     s = DownloadScheduler()
 
