@@ -38,12 +38,12 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (branch_speculation, dispatch_overhead,
-                            download_pipeline, fig3_vmul_reduce, isa_mix,
-                            pr_overhead, relocation, residency_churn,
+                            download_pipeline, fig3_vmul_reduce, fleet_serving,
+                            isa_mix, pr_overhead, relocation, residency_churn,
                             tile_granularity)
     modules = [fig3_vmul_reduce, pr_overhead, download_pipeline, isa_mix,
                tile_granularity, branch_speculation, residency_churn,
-               relocation, dispatch_overhead]
+               relocation, dispatch_overhead, fleet_serving]
     print("name,us_per_call,derived")
     rows: list[str] = []
     failed = 0

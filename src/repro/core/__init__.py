@@ -13,12 +13,14 @@ Public API (frontend first — the paper's programming model):
   cache.BitstreamCache                        — compiled-artifact (PR) cache
   fabric.Fabric / ResidentAccelerator         — shared-fabric tile residency
   scheduler.DownloadScheduler                 — async PR-download pipeline
+  fleet.FleetOverlay                          — multi-fabric fleet serving
 """
 
 from repro.core.cache import (BitstreamCache, SpecializationStats, aot_compile,
                               cache_key, kernel_jit_kwargs, kernel_key,
                               signature_of, spec_key)
 from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
+from repro.core.fleet import FleetJitAssembled, FleetOverlay, FleetStats
 from repro.core.graph import Graph, branchy_graph, saxpy_graph, vmul_reduce_graph
 from repro.core.interpreter import (AssembledAccelerator, assemble,
                                     assemble_sharded, bind_routes,
@@ -42,6 +44,7 @@ from repro.core.trace import Lowered, TraceError, trace_to_graph
 __all__ = [
     "AssembledAccelerator", "BitstreamCache", "DownloadHandle",
     "DownloadScheduler", "Fabric", "FabricError",
+    "FleetJitAssembled", "FleetOverlay", "FleetStats",
     "Graph", "Instruction",
     "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
     "Placement", "PlacementError", "PlacementPolicy", "Program",

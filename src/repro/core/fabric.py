@@ -28,7 +28,7 @@ travel through one path (``Overlay.evict``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from typing import Any, Callable, Iterable
 
 from repro.core.graph import Graph
 from repro.core.isa import Program
@@ -169,8 +169,9 @@ class Fabric:
             return None
         return min(self._residents.values(), key=lambda r: r.last_used)
 
-    def reclaim_victim(self, *, cost_aware: bool = False
-                       ) -> ResidentAccelerator | None:
+    def reclaim_victim(self, *, cost_aware: bool = False,
+                       prefer: "Callable[[ResidentAccelerator], bool] | None"
+                       = None) -> ResidentAccelerator | None:
         """The resident to reclaim under placement pressure.
 
         Pure-LRU by default.  ``cost_aware=True`` scores each resident by
@@ -184,11 +185,22 @@ class Fabric:
         is neither the default victim nor unevictable.  With no measurements
         anywhere every score degenerates to ``age`` and the choice is
         exactly LRU.
+
+        ``prefer`` narrows the victim pool BEFORE the LRU/cost scoring: when
+        any resident satisfies the predicate, only those are candidates
+        (fleet reclaim uses this to sacrifice replicated residents — copies
+        that live on another fabric too — before any sole copy).  If none
+        satisfies it, the full pool is scored as usual.
         """
         if not self._residents:
             return None
+        pool = list(self._residents.values())
+        if prefer is not None:
+            preferred = [r for r in pool if prefer(r)]
+            if preferred:
+                pool = preferred
         if not cost_aware:
-            return self.lru()
+            return min(pool, key=lambda r: r.last_used)
         now = self._tick + 1
         known = [c for c in self._download_costs.values() if c > 0.0]
         prior = sum(known) / len(known) if known else 1.0
@@ -198,7 +210,7 @@ class Fabric:
             cost = self._download_costs.get(r.rid) or r.download_cost or prior
             return age / (cost + 1e-3)
 
-        return max(self._residents.values(), key=score)
+        return max(pool, key=score)
 
     def lru_order(self) -> list[ResidentAccelerator]:
         """Residents least-recently-used first."""

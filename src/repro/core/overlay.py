@@ -283,7 +283,8 @@ class JitAssembled:
         entry.pending = None
 
     def _submit(self, entry: _JitEntry, *, kind: str = "demand",
-                reclaim: bool = True) -> DownloadHandle | None:
+                reclaim: bool = True, low: bool = False
+                ) -> DownloadHandle | None:
         """Request this entry's download; bounded retry on compile failure
         (the fallback keeps serving either way).  After ``overlay.close()``
         no new downloads start but calls keep being served."""
@@ -299,7 +300,7 @@ class JitAssembled:
         handle = self.overlay.submit_download(
             entry.lowered.graph, fixed=self.fixed,
             jit_kwargs=entry.jit_kwargs, tile_budget=self.tile_budget,
-            kind=kind, reclaim=reclaim,
+            kind=kind, reclaim=reclaim, low=low,
             on_done=lambda acc2, h: self._swap(entry, acc2, t0, h))
         entry.pending = handle
         return handle
@@ -370,7 +371,8 @@ class JitAssembled:
         return {"trace_seconds": e.trace_seconds,
                 "assemble_seconds": e.assemble_seconds}
 
-    def prefetch(self, *args) -> DownloadHandle | None:
+    def prefetch(self, *args, low: bool = False,
+                 reclaim: bool = True) -> DownloadHandle | None:
         """Hint: download this signature's bitstream before traffic needs it.
 
         ``args`` may be concrete arrays or ``jax.ShapeDtypeStruct`` pytrees.
@@ -378,6 +380,13 @@ class JitAssembled:
         worker (returns the in-flight :class:`DownloadHandle`); on a
         synchronous overlay the download is paid eagerly right here (AOT
         population).  Already-resident signatures are a no-op.
+
+        ``low=True`` routes the background compile to the scheduler's LOW
+        lane (background optimization — fleet replication uses this so a
+        replica download never delays a demand download or relocation);
+        ``reclaim=False`` raises :class:`PlacementError` under placement
+        pressure instead of displacing live residents (ignored on a
+        synchronous overlay, where the eager path reclaims as assemble does).
         """
         presplit = self._split(args)
         dyn, closed, static_repr = presplit
@@ -394,7 +403,7 @@ class JitAssembled:
         if entry.pending is not None and not entry.pending.done():
             return entry.pending                     # already on its way
         entry.jit_kwargs = self._jit_kwargs(args)
-        return self._submit(entry, kind="prefetch")
+        return self._submit(entry, kind="prefetch", reclaim=reclaim, low=low)
 
     def _prefetch_known(self) -> int:
         """Re-request downloads for every signature this wrapper has seen —
@@ -610,6 +619,11 @@ class Overlay:
         self.specialize_after = int(specialize_after)
         self.scheduler = DownloadScheduler(workers=download_workers)
         self.stats = OverlayStats()
+        # optional victim-pool narrowing for pressure reclaims: residents
+        # satisfying this predicate are sacrificed first (a FleetOverlay
+        # installs one per member so replicated copies go before sole ones)
+        self.reclaim_prefer: "Callable[[ResidentAccelerator], bool] | None" \
+            = None
         self._last_placement: Placement | None = None
         # one lock for all fabric/cache mutation: foreground assemblies and
         # background download commits serialize on it
@@ -734,7 +748,8 @@ class Overlay:
                              max_tiles=tile_budget)
             except PlacementError:
                 victim = self.fabric.reclaim_victim(
-                    cost_aware=self.cost_aware_reclaim)
+                    cost_aware=self.cost_aware_reclaim,
+                    prefer=self.reclaim_prefer)
                 if victim is None:
                     raise
                 if not probed:
@@ -1268,7 +1283,8 @@ class Overlay:
                         on_done: "Callable[[Any, DownloadHandle], None] | None"
                         = None,
                         kind: str = "demand",
-                        reclaim: bool = True) -> DownloadHandle:
+                        reclaim: bool = True,
+                        low: bool = False) -> DownloadHandle:
         """Begin an asynchronous PR download for ``graph``.
 
         Foreground (cheap, under the overlay lock): place the graph —
@@ -1322,7 +1338,7 @@ class Overlay:
             rid,
             lambda: self._compile_bitstream(pending),
             lambda exe, dt: self._commit_download(pending, exe, dt),
-            on_done=on_done, kind=kind)
+            on_done=on_done, kind=kind, low=low)
 
     def _compile_bitstream(self, pending: _PendingDownload):
         """The expensive half of a download — eager XLA compile of the

@@ -6,6 +6,11 @@
 ``--overlay`` serves through the JIT-assembled accelerator path: the decode
 step is traced by the overlay frontend, placed on a 3x3 tile grid and cached
 as a bitstream (paper C1/C3) instead of being jitted directly.
+
+``--fleet N`` serves through a :class:`FleetOverlay` of N member fabrics
+(DESIGN.md §8): prefill/decode accelerators are placed across members by
+the fleet cost score, hot ones replicate, and dispatches route to the
+least-loaded live copy.  Implies the overlay path.
 """
 
 from __future__ import annotations
@@ -18,7 +23,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.archs import smoke_config
-from repro.core import Overlay
+from repro.core import FleetOverlay, Overlay
 from repro.models import params as pm
 from repro.models.transformer import model_spec
 from repro.serving import Request, ServeEngine
@@ -36,6 +41,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--overlay", action="store_true",
                     help="serve through the JIT-assembled overlay decode path")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through a FleetOverlay of N member fabrics "
+                         "(implies --overlay)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -43,7 +51,10 @@ def main(argv=None) -> int:
         raise SystemExit("serve launcher targets decoder LMs; use examples/")
 
     params = pm.init(model_spec(cfg), jax.random.PRNGKey(args.seed))
-    overlay = Overlay(3, 3) if args.overlay else None
+    if args.fleet > 0:
+        overlay = FleetOverlay(args.fleet, rows=3, cols=3)
+    else:
+        overlay = Overlay(3, 3) if args.overlay else None
     engine = ServeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
                          overlay=overlay)
 

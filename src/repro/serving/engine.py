@@ -25,6 +25,13 @@ decode-step shapes are known), it *prefetches* the decode accelerator, so
 decode's bitstream compiles on the scheduler worker while prefill tokens
 stream — by the first decode tick the swap has usually landed and no tick
 ever blocks on a compile.
+
+``overlay=`` also accepts a :class:`~repro.core.fleet.FleetOverlay`
+(DESIGN.md §8): the same two accelerators are then *placed across member
+fabrics* by the fleet's cost score, prompt-length prefill variants spread
+over members instead of fighting for one fabric's tiles, and a hot decode
+accelerator is replicated and least-loaded-routed — the engine code is
+identical because the fleet exposes the single-overlay surface.
 """
 
 from __future__ import annotations
@@ -37,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.fleet import FleetOverlay
 from repro.core.overlay import Overlay
 from repro.models import model as mdl
 
@@ -53,7 +61,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params: Any, cfg: ArchConfig, *, batch: int,
-                 max_len: int, overlay: Overlay | None = None,
+                 max_len: int,
+                 overlay: "Overlay | FleetOverlay | None" = None,
                  tile_budget: int | None = None):
         self.params = params
         self.cfg = cfg
@@ -124,6 +133,21 @@ class ServeEngine:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request for admission.
+
+        Validates the prompt against the engine's KV budget here, at the
+        API boundary, instead of failing later inside the prefill cache
+        scatter: the prompt must fit in ``max_len`` with at least one
+        decode step of headroom (position ``len(prompt)`` writes the first
+        decoded token's KV entry)."""
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if n + 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {n} tokens does not fit in "
+                f"max_len={self.max_len} with decode headroom (the engine "
+                f"needs len(prompt) + 1 <= max_len; got {n + 1})")
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -194,9 +218,21 @@ class ServeEngine:
         return finished
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        """Tick until every queued and resident request retires.
+
+        Raises :class:`RuntimeError` if ``max_ticks`` is exhausted with
+        work still queued or resident — a stuck engine (dead fleet member,
+        runaway request) must be visible, not silently dropped."""
         done: list[Request] = []
         for _ in range(max_ticks):
-            done.extend(self.step())
             if not self.queue and all(r is None for r in self.slot_req):
-                break
+                return done
+            done.extend(self.step())
+        if self.queue or any(r is not None for r in self.slot_req):
+            queued = len(self.queue)
+            resident = sum(1 for r in self.slot_req if r is not None)
+            raise RuntimeError(
+                f"run_until_drained: {max_ticks} ticks exhausted with "
+                f"{queued} request(s) still queued and {resident} still "
+                f"resident ({len(done)} finished)")
         return done

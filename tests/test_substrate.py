@@ -248,3 +248,39 @@ def test_serve_engine_retires_on_decode_steps_not_prefill_token():
     assert ticks == 3                          # one tick per decode step
     assert done[0].decode_steps == 3
     assert len(done[0].out) == 4               # prefill token + 3 decode
+
+
+def test_serve_engine_submit_rejects_oversized_prompt():
+    """Regression: a prompt longer than the KV budget used to be accepted at
+    submit() and only blow up later inside the prefill cache scatter.  The
+    engine needs len(prompt) + 1 <= max_len (one decode step of headroom)."""
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg, batch=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.submit(Request(rid=0, prompt=list(range(1, 17)),
+                              max_new_tokens=1))   # len 16 == max_len: no room
+    with pytest.raises(ValueError, match="empty"):
+        engine.submit(Request(rid=1, prompt=[], max_new_tokens=1))
+    # boundary: len(prompt) + 1 == max_len is admitted and decodes one step
+    engine.submit(Request(rid=2, prompt=list(range(1, 16)),
+                          max_new_tokens=4))
+    done = engine.run_until_drained()
+    assert done[0].rid == 2 and done[0].decode_steps == 1  # capped by max_len
+
+
+def test_serve_engine_run_until_drained_raises_on_tick_exhaustion():
+    """Regression: run_until_drained used to return silently with requests
+    still queued or resident when max_ticks ran out — a stuck engine looked
+    like a drained one."""
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = pm.init(model_spec(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg, batch=1, max_len=64)
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=30))
+    with pytest.raises(RuntimeError, match="still"):
+        engine.run_until_drained(max_ticks=2)
+    # the engine is still usable: remaining ticks finish the request
+    done = engine.run_until_drained()
+    assert done[0].decode_steps == 30
+    # an already-drained engine returns immediately regardless of max_ticks
+    assert engine.run_until_drained(max_ticks=0) == []
