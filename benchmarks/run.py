@@ -22,7 +22,22 @@ def _parse_row(line: str) -> dict:
         value: float | None = float(us)
     except ValueError:
         value = None
-    return {"name": name, "us_per_call": value, "derived": derived}
+    entry: dict = {"name": name, "us_per_call": value, "derived": derived}
+    # structured fields: benchmarks emit space-separated k=v tokens in the
+    # derived column (e.g. goodput=131.0 ttft_p99_ms=108) — surface them as
+    # typed JSON so perf tracking can read them without re-parsing strings
+    fields: dict = {}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        try:
+            fields[k] = float(v) if "." in v or "e" in v.lower() else int(v)
+        except ValueError:
+            fields[k] = v
+    if fields:
+        entry["fields"] = fields
+    return entry
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -39,11 +54,11 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (branch_speculation, dispatch_overhead,
                             download_pipeline, fig3_vmul_reduce, fleet_serving,
-                            isa_mix, pr_overhead, relocation, residency_churn,
-                            tile_granularity)
+                            isa_mix, overload_serving, pr_overhead, relocation,
+                            residency_churn, tile_granularity)
     modules = [fig3_vmul_reduce, pr_overhead, download_pipeline, isa_mix,
                tile_granularity, branch_speculation, residency_churn,
-               relocation, dispatch_overhead, fleet_serving]
+               relocation, dispatch_overhead, fleet_serving, overload_serving]
     print("name,us_per_call,derived")
     rows: list[str] = []
     failed = 0

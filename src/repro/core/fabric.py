@@ -34,6 +34,7 @@ from repro.core.graph import Graph
 from repro.core.isa import Program
 from repro.core.patterns import TileClass
 from repro.core.placement import Coord, Placement, TileGrid
+from repro.serving.metrics import Histogram
 
 
 class FabricError(RuntimeError):
@@ -83,6 +84,13 @@ class ResidentAccelerator:
     spec_jit_kwargs: Any = None    # the jit kwargs it was compiled under
     spec_failures: int = 0         # failed spec compiles at these routes
     live: bool = True
+    # dispatch observability (DESIGN.md §9): per-resident end-to-end call
+    # latency (us) recorded on the dispatch fast path, and the total hop
+    # count of the current route program (re-derived on relocation).  The
+    # histogram survives relocation — latency history prices the RESIDENT,
+    # not one placement.
+    dispatch_hist: Any = None
+    route_cost: int = 0
 
 
 def _occupants_of(graph: Graph, placement: Placement) -> dict[Coord, tuple[TileClass, ...]]:
@@ -255,7 +263,8 @@ class Fabric:
             tile_budget=tile_budget, fixed=fixed,
             downloads=self._download_counts[rid],
             download_cost=self._download_costs.get(rid, 0.0),
-            admit_generation=self._generation)
+            admit_generation=self._generation,
+            dispatch_hist=Histogram())
         self._residents[rid] = res
         return res
 
@@ -390,7 +399,11 @@ class Fabric:
                           "tier": res.tier,
                           "zero_hop": res.zero_hop,
                           "specializing": res.spec_pending,
-                          "last_used": res.last_used}
+                          "last_used": res.last_used,
+                          "route_cost": res.route_cost,
+                          "dispatch_latency": (
+                              res.dispatch_hist.summary()
+                              if res.dispatch_hist is not None else None)}
                 for res in self.lru_order()
             },
         }

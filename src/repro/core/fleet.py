@@ -300,7 +300,14 @@ class FleetOverlay:
                      download-cost EWMA of its residents (what a reclaim
                      would pay to re-download), squashed to [0, 1) and
                      scaled by occupancy (a mostly-free member rarely
-                     reclaims at all).
+                     reclaims at all),
+        ``latency`` — MEASURED dispatch feedback (DESIGN.md §9): the
+                     member's p50 dispatch latency relative to the slowest
+                     member's, from the overlay-level histograms.  Exactly
+                     0 until dispatches have been recorded, so placement
+                     on a cold fleet is unchanged; under traffic a member
+                     whose dispatches run slow (contended, unspecialized)
+                     is deprioritized for NEW placements.
         """
         fab = self.members[idx].fabric
         free = len(fab.free()) / fab.grid.num_tiles
@@ -311,7 +318,14 @@ class FleetOverlay:
                  for r in residents]
         mean_cost = (sum(costs) / len(costs)) if costs else 0.0
         price = (1.0 - free) * mean_cost / (1.0 + mean_cost)
-        return free - 0.5 * load - 0.5 * price
+        score = free - 0.5 * load - 0.5 * price
+        p50 = self.members[idx].dispatch_hist.percentile(0.5)
+        if p50 > 0.0:
+            worst = max(m.dispatch_hist.percentile(0.5)
+                        for m in self.members)
+            if worst > 0.0:
+                score -= 0.25 * (p50 / worst)
+        return score
 
     def _best_member(self, exclude: "frozenset[int] | set[int]" = frozenset(),
                      min_free: int = 0) -> int | None:
@@ -645,6 +659,12 @@ class FleetOverlay:
                     "routed_per_member": list(self._routed_total),
                     "scores": [round(self._member_score(i), 4)
                                for i in range(len(self.members))],
+                    "dispatch_p50_us": [
+                        round(m.dispatch_hist.percentile(0.5), 3)
+                        for m in self.members],
+                    "dispatch_p99_us": [
+                        round(m.dispatch_hist.percentile(0.99), 3)
+                        for m in self.members],
                     "records": records,
                     **dataclasses.asdict(self.stats),
                 },

@@ -72,6 +72,7 @@ from repro.core.placement import (Coord, Placement, PlacementError,
                                   PlacementPolicy, TileGrid,
                                   check_assignment, place)
 from repro.core.scheduler import DownloadHandle, DownloadScheduler
+from repro.serving.metrics import Histogram
 
 # a persistently failing background compile stops being retried after this
 # many attempts; the entry keeps serving from its fallback
@@ -501,7 +502,11 @@ class JitAssembled:
             if res.zero_hop or res.stable_dispatches >= ov.specialize_after:
                 ov._request_specialize(entry, res)
         flat = jax.tree.leaves(presplit[0])
+        t0 = time.perf_counter()
         out = rec.fn(*flat)
+        us = (time.perf_counter() - t0) * 1e6
+        res.dispatch_hist.record(us)
+        ov.dispatch_hist.record(us)
         n_out = len(entry.lowered.graph.output_ids)
         leaves = list(out) if n_out > 1 else [out]
         return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
@@ -539,7 +544,12 @@ class JitAssembled:
             if rec is not None and rec.tier == "specialized":
                 ov.cache.spec_stats.specialized_hits += 1
             flat = jax.tree.leaves(presplit[0])
+            t0 = time.perf_counter()
             out = fn(*flat)
+            us = (time.perf_counter() - t0) * 1e6
+            if rec is not None and rec.res.dispatch_hist is not None:
+                rec.res.dispatch_hist.record(us)
+            ov.dispatch_hist.record(us)
         n_out = len(entry.lowered.graph.output_ids)
         leaves = list(out) if n_out > 1 else [out]
         return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
@@ -630,6 +640,11 @@ class Overlay:
         self._lock = threading.RLock()
         self._wrappers: "weakref.WeakSet[JitAssembled]" = weakref.WeakSet()
         self._prefetched: set[str] = set()   # rids downloaded ahead of demand
+        # dispatch observability (DESIGN.md §9): overlay-wide roll-ups of
+        # the per-resident ledgers — end-to-end dispatch latency (us, both
+        # tiers) and total route hops per admitted/relocated placement
+        self.dispatch_hist = Histogram()
+        self.route_cost_hist = Histogram()
 
     # -- async bookkeeping ----------------------------------------------------
     def _register(self, wrapper: "JitAssembled") -> None:
@@ -821,8 +836,10 @@ class Overlay:
             resident.rid, resident.placement.descriptor(),
             lambda: jax.device_put(
                 interp.route_vector(graph, resident.placement)))
-        resident.zero_hop = interp.zero_hop(
-            interp.route_hops(graph, resident.placement))
+        hops = interp.route_hops(graph, resident.placement)
+        resident.zero_hop = interp.zero_hop(hops)
+        resident.route_cost = int(sum(hops))
+        self.route_cost_hist.record(resident.route_cost)
 
     def _base_acc(self, graph: Graph,
                   resident: ResidentAccelerator) -> interp.AssembledAccelerator:
@@ -1608,6 +1625,8 @@ class Overlay:
                 "specialize_after": self.specialize_after,
             },
             "fabric": self.fabric.describe(),
+            "dispatch_latency": self.dispatch_hist.summary(),
+            "route_cost": self.route_cost_hist.summary(),
             "assemblies": self.stats.assemblies,
             "reconfigurations": self.stats.reconfigurations,
             "traces": self.stats.traces,

@@ -11,6 +11,13 @@ as a bitstream (paper C1/C3) instead of being jitted directly.
 (DESIGN.md §8): prefill/decode accelerators are placed across members by
 the fleet cost score, hot ones replicate, and dispatches route to the
 least-loaded live copy.  Implies the overlay path.
+
+``--event-loop`` serves through the :class:`EventLoopEngine` (DESIGN.md
+§9): chunked power-of-two-bucketed prefill interleaved with decode ticks
+plus SLO-aware admission — ``--chunk`` sets the prefill chunk size,
+``--max-queue`` bounds queue depth, and ``--max-queue-delay`` (seconds)
+sheds requests that would miss their delay budget.  Shed requests and the
+engine's latency histograms are reported after the drain.
 """
 
 from __future__ import annotations
@@ -44,6 +51,15 @@ def main(argv=None) -> int:
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="serve through a FleetOverlay of N member fabrics "
                          "(implies --overlay)")
+    ap.add_argument("--event-loop", action="store_true",
+                    help="serve through the EventLoopEngine (chunked "
+                         "bucketed prefill + SLO-aware admission)")
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="prefill chunk size (power of two; event loop only)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="shed submissions beyond this queue depth")
+    ap.add_argument("--max-queue-delay", type=float, default=None,
+                    help="shed requests queued longer than this (seconds)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -55,8 +71,15 @@ def main(argv=None) -> int:
         overlay = FleetOverlay(args.fleet, rows=3, cols=3)
     else:
         overlay = Overlay(3, 3) if args.overlay else None
-    engine = ServeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
-                         overlay=overlay)
+    if args.event_loop:
+        from repro.serving import EventLoopEngine
+        engine = EventLoopEngine(
+            params, cfg, batch=args.batch, max_len=args.max_len,
+            overlay=overlay, chunk=args.chunk, max_queue=args.max_queue,
+            max_queue_delay=args.max_queue_delay)
+    else:
+        engine = ServeEngine(params, cfg, batch=args.batch,
+                             max_len=args.max_len, overlay=overlay)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -71,6 +94,12 @@ def main(argv=None) -> int:
     tokens = sum(len(r.out) for r in done)
     print(f"[serve] {cfg.name}: {len(done)}/{args.requests} requests, "
           f"{tokens} tokens in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
+    if args.event_loop:
+        shed = getattr(engine, "shed", [])
+        if shed:
+            print(f"[serve] shed {len(shed)} request(s): "
+                  f"{[(r.rid, r.shed_reason) for r in shed]}")
+        print(f"[serve] metrics: {engine.metrics()}")
     if overlay is not None:
         print(f"[serve] overlay: {overlay.describe()}")
     for r in done[:3]:

@@ -133,7 +133,9 @@ def _attention_xla(q, k, v, *, causal, window, softcap, scale,
     """Dense masked attention in plain XLA (B,H,Sq,D)x(B,Hkv,Sk,D).
 
     ``q_offset`` positions queries within the kv sequence (decode);
-    ``kv_len`` masks out unwritten cache slots.
+    ``kv_len`` masks out unwritten cache slots.  Either may also be a (B,)
+    array — ragged decode, where every batch row sits at its own position
+    (continuous batching with mixed prompt lengths).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -148,6 +150,26 @@ def _attention_xla(q, k, v, *, causal, window, softcap, scale,
     s = shd.constrain_logical(s, ("batch", "kv_heads", None, None, "seq"))
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
+    if getattr(q_offset, "ndim", 0) >= 1 or getattr(kv_len, "ndim", 0) >= 1:
+        # ragged: per-row offsets/lengths -> a (B, Sq, Sk) mask.  Mask
+        # VALUES for any given row match the scalar path at that row's
+        # position exactly, so uniform batches stay bit-identical.
+        qo = jnp.asarray(q_offset, jnp.int32).reshape(-1)
+        qpos = qo[:, None, None] + jnp.arange(sq)[None, :, None]
+        kpos = jnp.arange(sk)[None, None, :]
+        mask = jnp.ones((b, sq, sk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        if kv_len is not None:
+            kl = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+            mask &= kpos < kl[:, None, None]
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
     qpos = q_offset + jnp.arange(sq)[:, None]
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), bool)
@@ -291,6 +313,25 @@ def attn_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *, kind: str,
                                softcap=cfg.attn_softcap, scale=scale,
                                kv_len=idx)
             new_cache = cache
+        elif getattr(positions, "ndim", 0) >= 2:
+            # ragged decode (s == 1): every batch row writes its KV entry at
+            # its OWN position and attends against its own filled extent.
+            # One-hot jnp.where writes (pure value copies, batch/head-local;
+            # seq stays unsharded under SERVE_RULES so this is shard-local)
+            # instead of a shared dynamic_update_slice — the scalar cache
+            # "index" keeps ticking but the mask below never reads it.
+            pos_b = positions[:, 0].astype(jnp.int32)              # (B,)
+            sel = jnp.arange(cache["k"].shape[2])[None, :] == pos_b[:, None]
+            ck = jnp.where(sel[:, None, :, None],
+                           kt.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(sel[:, None, :, None],
+                           vt.astype(cache["v"].dtype), cache["v"])
+            ck = shd.constrain_logical(ck, ("batch", "kv_heads", "seq", None))
+            cv = shd.constrain_logical(cv, ("batch", "kv_heads", "seq", None))
+            o = _attention_xla(qt, ck, cv, causal=True, window=window,
+                               softcap=cfg.attn_softcap, scale=scale,
+                               q_offset=pos_b, kv_len=pos_b + s)
+            new_cache = {"k": ck, "v": cv, "index": idx + s}
         else:
             ck = cache_update(cache["k"], kt, idx, axis=2)
             cv = cache_update(cache["v"], vt, idx, axis=2)
@@ -385,8 +426,21 @@ def mla_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
 
     # absorbed decode: score via latent cache, never materialize K/V
     idx = cache["index"]
-    ckv = cache_update(cache["c_kv"], c_kv, idx, axis=1)            # (B, Smax, r)
-    krc = cache_update(cache["k_rope"], k_rope[:, :, 0], idx, axis=1)
+    if getattr(positions, "ndim", 0) >= 2:
+        # ragged decode: per-row one-hot latent writes + per-row causal
+        # extent (mirrors the ragged branch in attn_fwd)
+        pos_b = positions[:, 0].astype(jnp.int32)                   # (B,)
+        sel = jnp.arange(cache["c_kv"].shape[1])[None, :] == pos_b[:, None]
+        ckv = jnp.where(sel[:, :, None],
+                        c_kv.astype(cache["c_kv"].dtype), cache["c_kv"])
+        krc = jnp.where(sel[:, :, None],
+                        k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+                        cache["k_rope"])
+        qpos_b = (pos_b[:, None] + jnp.arange(s)[None, :])[:, None, :, None]
+    else:
+        ckv = cache_update(cache["c_kv"], c_kv, idx, axis=1)        # (B, Smax, r)
+        krc = cache_update(cache["k_rope"], k_rope[:, :, 0], idx, axis=1)
+        qpos_b = None
 
     wkv_b = p["wkv_b"].reshape(r, h, nope + vh)
     w_k = wkv_b[..., :nope]                              # (r, h, nope)
@@ -399,7 +453,8 @@ def mla_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
                          krc.astype(jnp.float32))) * scale
     # causal within the incoming window: query at idx+i sees keys <= idx+i
     kpos = jnp.arange(ckv.shape[1])[None, None, None, :]
-    qpos = (idx + jnp.arange(s))[None, None, :, None]
+    qpos = qpos_b if qpos_b is not None else \
+        (idx + jnp.arange(s))[None, None, :, None]
     scores = jnp.where(kpos <= qpos, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhsl,blr->bshr", probs, ckv.astype(jnp.float32))

@@ -149,11 +149,39 @@ def _fill_cross_caches(params, cfg, enc_out, caches):
     return new
 
 
-def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict):
-    """One token for every sequence in the batch. token: (B, 1)."""
-    pos0 = _current_index(cfg, caches)
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict,
+                *, positions: jax.Array | None = None):
+    """One token for every sequence in the batch. token: (B, 1).
+
+    ``positions=None`` reads the shared scalar cache index (uniform batch —
+    every row at the same depth).  Pass a (B,) int32 array to decode each
+    row at its OWN KV position instead: ragged continuous batching, where
+    co-resident slots hold prompts of different lengths (serving engine).
+    """
+    pos0 = _current_index(cfg, caches) if positions is None else positions
     h, caches, _ = tfm.forward(params, cfg, token, pos0=pos0, caches=caches)
     return tfm.unembed(params, h, cfg)[:, 0], caches
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                  caches: dict, last_index: jax.Array):
+    """Prefill ONE fixed-size chunk of a prompt into ``caches``.
+
+    ``tokens``: (B, C) — the next C prompt tokens, starting at the cache's
+    current index.  The final chunk of a prompt may be right-padded to a
+    power-of-two bucket; padded positions write garbage K/V beyond the real
+    prompt, which is causally masked here and overwritten position-by-
+    position by decode before any query can attend to it.  ``last_index``
+    is a *traced* int32 scalar selecting the in-chunk position whose
+    logits are returned — the chunk length C is the only static shape, so
+    one compiled signature serves every prompt sharing a bucket size.
+    Returns (logits (B, V), caches).
+    """
+    pos0 = _current_index(cfg, caches)
+    h, caches, _ = tfm.forward(params, cfg, tokens, pos0=pos0, caches=caches)
+    logits = tfm.unembed(params, h, cfg)
+    sel = jax.lax.dynamic_slice_in_dim(logits, last_index, 1, axis=1)
+    return sel[:, 0], caches
 
 
 def _current_index(cfg: ArchConfig, caches: dict):

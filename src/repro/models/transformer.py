@@ -261,7 +261,12 @@ def forward(params: dict, cfg: ArchConfig, tokens: jax.Array, *,
         pe = (patch_embeds.astype(h.dtype) @ params["frontend_proj"])
         npatch = pe.shape[1]
         h = jnp.concatenate([pe, h[:, npatch:]], axis=1)
-    positions = pos0 + jnp.arange(tokens.shape[1])
+    if getattr(pos0, "ndim", 0) >= 1:
+        # per-row start positions (B,) -> ragged (B, S) position grid; the
+        # attention layers switch to per-row cache writes/masks on seeing it
+        positions = pos0[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    else:
+        positions = pos0 + jnp.arange(tokens.shape[1])
 
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: dict | None = {} if caches is not None else None

@@ -1,3 +1,22 @@
-from repro.serving.engine import Request, ServeEngine
+"""Serving layer: batched engines + dispatch/latency metrics.
 
-__all__ = ["Request", "ServeEngine"]
+``metrics`` is imported eagerly — it is dependency-free and the core
+overlay layers record into its :class:`Histogram` on the dispatch path.
+The engine classes are exposed lazily (PEP 562): ``engine``/``loop``
+import ``repro.core``, which imports ``repro.serving.metrics``, so an
+eager import here would close an import cycle.
+"""
+
+from repro.serving.metrics import Histogram
+
+__all__ = ["Histogram", "Request", "ServeEngine", "EventLoopEngine"]
+
+
+def __getattr__(name: str):
+    if name in ("Request", "ServeEngine"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    if name == "EventLoopEngine":
+        from repro.serving.loop import EventLoopEngine
+        return EventLoopEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

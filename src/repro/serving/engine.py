@@ -32,6 +32,19 @@ fabrics* by the fleet's cost score, prompt-length prefill variants spread
 over members instead of fighting for one fabric's tiles, and a hot decode
 accelerator is replicated and least-loaded-routed — the engine code is
 identical because the fleet exposes the single-overlay surface.
+
+Decode is *ragged*: every slot carries its own KV position (``slot_pos``
+feeds ``decode_step(positions=...)``), so slots admitted with different
+prompt lengths attend against the right cache extent.  Each decode tick
+performs ONE fused on-device update (sample + advance positions) and ONE
+``jax.device_get`` — no per-slot host round-trips on the hot path.
+
+Admission is FIFO here.  :class:`repro.serving.loop.EventLoopEngine`
+(DESIGN.md §9) extends this engine with the serving-under-load path:
+priority-ordered admission with SLO-aware shedding (queue-depth bound,
+max-queue-delay bound — shed requests are returned/recorded, never
+silently dropped) and chunked, power-of-two-bucketed prefill interleaved
+with decode ticks.
 """
 
 from __future__ import annotations
@@ -57,6 +70,26 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     decode_steps: int = 0     # batched decode ticks this request has taken
     done: bool = False
+    # SLO / event-loop fields (serving/loop.py); inert on the FIFO engine
+    priority: int = 0                     # lower value = served first
+    submit_time: float | None = None      # engine clock at submit()
+    first_token_time: float | None = None
+    shed: bool = False
+    shed_reason: str | None = None
+
+
+@jax.jit
+def _fused_tick_update(logits, cur_tokens, slot_pos, live):
+    """One on-device update for a decode tick: greedy-sample every live
+    slot, advance its position, and pack (token, new_position) per slot
+    into a single (2, B) int32 array so the host reads the whole tick with
+    ONE ``jax.device_get`` instead of 2×B scalar syncs.  Dead slots keep
+    their token/position unchanged."""
+    live_b = live.astype(bool)
+    tok = jnp.where(live_b, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    cur_tokens[:, 0])
+    new_pos = slot_pos + live.astype(jnp.int32)
+    return tok[:, None], new_pos, jnp.stack([tok, new_pos])
 
 
 class ServeEngine:
@@ -73,7 +106,9 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = jnp.zeros((batch,), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
-        step = lambda p, t, c: mdl.decode_step(p, cfg, t, c)
+        # ragged decode: every slot decodes at its own KV position
+        step = lambda p, t, c, pos: mdl.decode_step(p, cfg, t, c,
+                                                    positions=pos)
         pf = lambda p, toks, c: mdl.prefill(p, cfg, toks, c)
         if overlay is not None:
             if tile_budget is None:
@@ -90,6 +125,7 @@ class ServeEngine:
             self._decode = jax.jit(step)
             self._prefill = jax.jit(pf)
         self.cur_tokens = jnp.zeros((batch, 1), jnp.int32)
+        self._live_mask = jnp.zeros((batch,), jnp.int32)
         self._decode_prefetched = False
 
     # -- fabric management (relocatable bitstreams, DESIGN.md §6) ------------
@@ -128,8 +164,10 @@ class ServeEngine:
                 not getattr(self.overlay, "async_downloads", False):
             return
         self._decode_prefetched = True
-        self._decode.prefetch(self.params, self.cur_tokens, self.caches)
-        self._decode.specialize(self.params, self.cur_tokens, self.caches)
+        self._decode.prefetch(self.params, self.cur_tokens, self.caches,
+                              self.slot_pos)
+        self._decode.specialize(self.params, self.cur_tokens, self.caches,
+                                self.slot_pos)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -140,6 +178,10 @@ class ServeEngine:
         scatter: the prompt must fit in ``max_len`` with at least one
         decode step of headroom (position ``len(prompt)`` writes the first
         decoded token's KV entry)."""
+        self._validate_request(req)
+        self.queue.append(req)
+
+    def _validate_request(self, req: Request) -> None:
         n = len(req.prompt)
         if n == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
@@ -148,7 +190,6 @@ class ServeEngine:
                 f"request {req.rid}: prompt of {n} tokens does not fit in "
                 f"max_len={self.max_len} with decode headroom (the engine "
                 f"needs len(prompt) + 1 <= max_len; got {n + 1})")
-        self.queue.append(req)
 
     def _admit(self) -> None:
         for slot in range(self.batch):
@@ -165,11 +206,17 @@ class ServeEngine:
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         c1 = mdl.init_cache(cfg, 1, self.max_len)
         logits, c1 = self._prefill(self.params, prompt, c1)
+        self._install_stripe(slot, req, c1, int(jnp.argmax(logits[0])))
 
+    def _install_stripe(self, slot: int, req: Request, c1: dict,
+                        tok: int) -> None:
+        """Scatter a finished batch-1 prefill cache into the pooled cache
+        and mark the slot live for decode."""
         def place(pool, one):
             if one.dtype == jnp.int32:
-                # decode-position leaves: uniform-admission engine keeps the
-                # pool position at the max filled prompt length
+                # per-layer scalar index leaves — shared across slots, so
+                # keep the max; ragged decode never reads them (it uses the
+                # per-slot ``slot_pos`` positions instead)
                 return jnp.maximum(pool, one.astype(pool.dtype))
             # batch axis differs by cache kind; find the axis of size 1
             for ax in range(one.ndim):
@@ -179,43 +226,49 @@ class ServeEngine:
             return pool
 
         self.caches = jax.tree.map(place, self.caches, c1)
-        # indices are per-layer scalars stacked (rep,) — shared across slots;
-        # continuous batching with ragged starts keeps per-slot positions:
         self.slot_pos = self.slot_pos.at[slot].set(len(req.prompt))
-        tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
         self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
         self.slot_req[slot] = req
+        self._live_mask = self._live_mask.at[slot].set(1)
 
     # -- decode --------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit, batched-decode, retire. Returns finished."""
         self._admit()
         live = [s for s, r in enumerate(self.slot_req) if r is not None]
-        finished: list[Request] = []
         if not live:
-            return finished
+            return []
+        return self._decode_tick(live)
 
+    def _decode_tick(self, live: list[int]) -> list[Request]:
+        """Batched ragged decode over ``live`` slots with ONE host transfer:
+        sample/advance happens fused on device and the host reads a single
+        packed (token, position) array per tick."""
         logits, self.caches = self._decode(
-            self.params, self.cur_tokens, self.caches)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.params, self.cur_tokens, self.caches, self.slot_pos)
+        self.cur_tokens, self.slot_pos, packed = _fused_tick_update(
+            logits, self.cur_tokens, self.slot_pos, self._live_mask)
+        toks, poss = jax.device_get(packed)     # the tick's one device->host
 
+        finished: list[Request] = []
         for slot in live:
             req = self.slot_req[slot]
-            tok = int(next_tok[slot])
-            req.out.append(tok)
+            req.out.append(int(toks[slot]))
             req.decode_steps += 1
-            self.slot_pos = self.slot_pos.at[slot].add(1)
-            self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
             # retire on decode steps, not len(out): out already holds the
             # prefill-produced token, which is not a decode step — counting
             # it finished requests one decode step early
             if req.decode_steps >= req.max_new_tokens or \
-                    int(self.slot_pos[slot]) + 1 >= self.max_len:
+                    int(poss[slot]) + 1 >= self.max_len:
                 req.done = True
                 finished.append(req)
-                self.slot_req[slot] = None
+                self._release_slot(slot)
         return finished
+
+    def _release_slot(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self._live_mask = self._live_mask.at[slot].set(0)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
         """Tick until every queued and resident request retires.
