@@ -139,6 +139,35 @@ def main(smoke: bool = False) -> list[str]:
                     "dispatch-record hot path"))
     rows.append(row("dispatch/fullpath_us", slow_us,
                     "full entry revalidation per call"))
+
+    # ---- sanitizer overhead (DESIGN.md §10): hit path is untouched -------
+    # the sanitize hooks sit on mutation edges (admit/relocate/evict), so a
+    # steady-state dispatch pays nothing beyond the flag field itself.
+    # Two fresh overlays, same function, alternated call-by-call so machine
+    # drift cancels out of the ratio (same discipline as the tiers above).
+    ov_off = Overlay(3, 3)
+    ov_san = Overlay(3, 3, sanitize=True)
+    pair = [ov_off.jit(fn, name="dispatch_chain_off", tile_budget=1),
+            ov_san.jit(fn, name="dispatch_chain_san", tile_budget=1)]
+    pair_samples: list[list[float]] = [[], []]
+    pair_iters = max(iters, 300)       # ~40us calls: 300 alternations are
+    for f in pair:                     # free, and the median is stable even
+        for _ in range(5):             # at smoke sizes
+            jax.block_until_ready(f(x, w))
+    for it in range(pair_iters):
+        for j in range(2):
+            i = (it + j) % 2
+            t0 = time.perf_counter()
+            jax.block_until_ready(pair[i](x, w))
+            pair_samples[i].append(time.perf_counter() - t0)
+    off_us, san_us = (sorted(s)[len(s) // 2] * 1e6 for s in pair_samples)
+    ov_off.close()
+    ov_san.close()
+    rows.append(row("dispatch/sanitized_us", san_us,
+                    "generic tier with sanitize=True (hit path)"))
+    rows.append(row("dispatch/sanitize_overhead_pct",
+                    100.0 * san_us / max(off_us, 1e-9) - 100.0,
+                    "bar: <=10 (hooks are off the hit path)"))
     rows.append(row("dispatch/tier_drift", tier_drift,
                     "|generic - specialized| (must be 0: bit-identical)"))
     rows.append(row("dispatch/cycle_drift", cycle_drift,

@@ -26,7 +26,7 @@ import numpy as np
 
 from benchmarks.common import row, time_call
 from repro.configs.archs import PAPER_VECTOR_LEN
-from repro.core import (PlacementPolicy, TileGrid, assemble, place_dynamic,
+from repro.core import (TileGrid, assemble, place_dynamic,
                         place_static, trace_to_graph)
 
 

@@ -1,0 +1,34 @@
+"""Static verification tooling for the overlay runtime.
+
+Three parts (DESIGN.md §10):
+
+* :mod:`repro.analysis.locklint` — AST concurrency lint (lock-order
+  cycles, unlocked shared writes, blocking calls under a lock).
+* :mod:`repro.analysis.check` — pure invariant checkers for the fabric
+  ledger, compiled entries, and fleet replica records.
+* the sanitizer mode — ``Overlay(sanitize=True)`` / ``REPRO_SANITIZE=1``
+  runs the checkers at every mutation edge and raises
+  :class:`repro.analysis.check.InvariantError` on the first violation.
+
+This package is import-light on purpose: ``locklint`` is stdlib-only so
+the CI lint lane runs without jax, and ``check`` only touches runtime
+objects handed to it.  Heavy submodules load lazily.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["check", "locklint", "InvariantError"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in ("check", "locklint"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    if name == "InvariantError":
+        from .check import InvariantError
+
+        return InvariantError
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,106 @@
+"""``python -m repro.analysis report`` — one-screen invariant audit.
+
+Pre-commit sanity check: runs the concurrency lint over ``src/repro``,
+prints the lock-order graph, then (when jax is importable) spins up a
+small live overlay + fleet, exercises admit/dispatch/relocate/evict under
+the sanitizer, and reports per-rule pass/fail counts from the static
+checkers.  Exit status is non-zero on any failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+from collections import Counter
+
+from . import locklint
+
+
+def _static_section(paths: list[str]) -> int:
+    kept, waived, lint = locklint.run(paths)
+    graph = lint.lock_graph_summary()
+    print("== locklint ==")
+    print(f"  locks:  {', '.join(graph['locks']) or '(none)'}")
+    for edge in graph["edges"]:
+        print(f"  order:  {edge}")
+    per_rule = Counter(f.rule for f in kept)
+    for rule in ("lock-order-cycle", "unlocked-shared-write",
+                 "blocking-call-under-lock"):
+        n = per_rule.get(rule, 0)
+        print(f"  {'FAIL' if n else 'ok  '}  {rule}: {n} finding(s)")
+    if waived:
+        print(f"  note: {len(waived)} audited finding(s) allowlisted")
+    for f in kept:
+        print(f"    {f.render()}")
+    return len(kept)
+
+
+def _live_section() -> int:
+    try:
+        import jax.numpy as jnp
+
+        from repro.core.fleet import FleetOverlay
+        from repro.core.overlay import Overlay
+    except Exception as exc:               # jax-free environment: skip
+        print("== live checkers ==")
+        print(f"  skipped (runtime not importable here: {exc})")
+        return 0
+
+    from . import check
+
+    print("== live checkers ==")
+    failures = 0
+
+    ov = Overlay(3, 3, sanitize=True)
+    f = ov.jit(lambda a, b: jnp.sum(a * b), name="audit")
+    x = jnp.ones((8, 8))
+    f(x, x)
+    ov.defragment()
+    ov.reconfigure(relocate=True)
+    f(x, x)
+    sections = [
+        ("fabric ledger", check.check_fabric(ov.fabric)),
+        ("entry/ISA", check.check_residency(ov)),
+        ("cache tables", check.check_cache(ov)),
+        ("describe() schema", check.check_overlay_describe(ov)),
+    ]
+    ov.evict("audit")
+    sections.append(("post-evict", check.check_overlay(ov)))
+    ov.close()
+
+    fleet = FleetOverlay(2, rows=3, cols=3, sanitize=True)
+    g = fleet.jit(lambda a: jnp.sum(a) * 2.0, name="audit_fleet")
+    for _ in range(4):
+        g(x)
+    with fleet._lock:
+        sections.append(("fleet records", check.check_fleet(fleet)))
+    sections.append(("fleet describe()", check.check_fleet_describe(fleet)))
+    fleet.close()
+
+    for name, violations in sections:
+        print(f"  {'FAIL' if violations else 'ok  '}  {name}: "
+              f"{len(violations)} violation(s)")
+        for v in violations:
+            print(f"    {v.rule}: {v.message}")
+        failures += len(violations)
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser("report", help="one-screen invariant audit")
+    rep.add_argument("paths", nargs="*", default=None,
+                     help="lint roots (default: src/repro)")
+    rep.add_argument("--static-only", action="store_true",
+                     help="skip the live overlay exercise")
+    args = ap.parse_args(argv)
+
+    failures = _static_section(args.paths or ["src/repro"])
+    if not args.static_only:
+        failures += _live_section()
+    print("PASS" if failures == 0 else f"FAIL ({failures} problem(s))")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

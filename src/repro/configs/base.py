@@ -24,7 +24,6 @@ Layer kinds:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable
 
 _REGISTRY: dict[str, Callable[[], "ArchConfig"]] = {}

@@ -273,6 +273,12 @@ class BitstreamCache:
             del self._routes[k]
         return len(doomed)
 
+    def has_route_program(self, owner: str, placement_desc: str) -> bool:
+        """Whether a route program is stored for ``owner`` at exactly this
+        placement — introspection for the invariant checkers; no stats, no
+        build."""
+        return f"{owner}|{placement_desc}" in self._routes
+
     def route_programs(self) -> int:
         """Route programs currently held (introspection)."""
         return len(self._routes)

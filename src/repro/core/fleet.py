@@ -263,6 +263,10 @@ class FleetOverlay:
                              "(hysteresis)")
         self.max_replicas = (len(members) if max_replicas is None
                              else max(1, min(int(max_replicas), len(members))))
+        # sanitizer rides through from the members (fleet-constructed ones
+        # pick it up via **overlay_kwargs / REPRO_SANITIZE): any sanitizing
+        # member turns on the fleet-level record checks after rebalance
+        self.sanitize = any(m.sanitize for m in members)
         self.stats = FleetStats()
         self._lock = threading.RLock()
         self._wrappers: "weakref.WeakSet[FleetJitAssembled]" = \
@@ -408,6 +412,10 @@ class FleetOverlay:
                 for rec in list(wrapper._records.values()):
                     self._rebalance_record(wrapper, rec)
             self._window_routed = [0] * len(self.members)
+            if self.sanitize:
+                from repro.analysis import check as _check
+
+                _check.ensure(_check.check_fleet(self, pruned=True))
 
     def _rebalance_record(self, wrapper: FleetJitAssembled,
                           rec: _FleetRecord) -> None:

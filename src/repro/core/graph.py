@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Callable, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import Graph
-from repro.core.isa import Instruction, Opcode, Program, compile_graph
+from repro.core.isa import Opcode, Program, compile_graph
 from repro.core.placement import Placement
 
 

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import os
 import threading
 import time
 import warnings
@@ -609,7 +610,8 @@ class Overlay:
                  download_workers: int = 1,
                  cost_aware_reclaim: bool | None = None,
                  auto_specialize: bool | None = None,
-                 specialize_after: int = 32) -> None:
+                 specialize_after: int = 32,
+                 sanitize: bool | None = None) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
@@ -628,6 +630,13 @@ class Overlay:
             raise ValueError("specialize_after must be >= 1")
         self.specialize_after = int(specialize_after)
         self.scheduler = DownloadScheduler(workers=download_workers)
+        # sanitizer mode (DESIGN.md §10): run the repro.analysis.check
+        # invariant suite at every mutation edge.  Off by default; the
+        # dispatch fast path does ZERO extra work when disabled (hooks sit
+        # on admit/evict/relocate/spec-commit, all behind this flag).
+        if sanitize is None:
+            sanitize = os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+        self.sanitize = bool(sanitize)
         self.stats = OverlayStats()
         # optional victim-pool narrowing for pressure reclaims: residents
         # satisfying this predicate are sacrificed first (a FleetOverlay
@@ -649,6 +658,14 @@ class Overlay:
     # -- async bookkeeping ----------------------------------------------------
     def _register(self, wrapper: "JitAssembled") -> None:
         self._wrappers.add(wrapper)
+
+    def _sanity_check(self) -> None:
+        """Sanitizer hook: run the full invariant suite (caller holds the
+        overlay lock).  Only reached when ``self.sanitize`` is on — the
+        import stays out of every default-mode code path."""
+        from repro.analysis import check as _check
+
+        _check.ensure(_check.check_overlay(self))
 
     def _note_demand(self, rid: str) -> None:
         """First demand access of a prefetched resident = one prefetch hit."""
@@ -824,6 +841,8 @@ class Overlay:
                 placement.assignment != self._last_placement.assignment:
             self.stats.reconfigurations += 1
         self._last_placement = placement
+        if self.sanitize:
+            self._sanity_check()
         return resident
 
     def _bind_routes_eager(self, graph: Graph,
@@ -906,6 +925,10 @@ class Overlay:
                 lambda _raw, _dt, rid=rid, gen=gen:
                     self._rebind_resident(rid, gen),
                 kind="relocate", priority=True)
+        # planned repacks (ignore non-empty) pass through legal transient
+        # overlap between movers — the plan driver checks once at the end
+        if self.sanitize and not ignore:
+            self._sanity_check()
         return res
 
     def _rebind_resident(self, rid: str, generation: int):
@@ -1095,6 +1118,8 @@ class Overlay:
                     entry.record = _DispatchRecord(
                         fn=fn, res=res, generation=res.generation,
                         tier="specialized")
+            if self.sanitize:
+                self._sanity_check()
             return exe
 
     def _despecialize(self, res: ResidentAccelerator) -> None:
@@ -1440,8 +1465,11 @@ class Overlay:
         # pinnings of one graph): only drop keys no surviving resident owns
         live_keys = {k for r in self.fabric.residents.values()
                      for k in r.cache_keys}
-        return self.cache.evict_keys(
+        removed = self.cache.evict_keys(
             [k for k in resident.cache_keys if k not in live_keys])
+        if self.sanitize:
+            self._sanity_check()
+        return removed
 
     def evict(self, target: "Graph | str") -> int:
         """Free one accelerator's PR regions AND its cached bitstreams
@@ -1531,6 +1559,8 @@ class Overlay:
             # compaction's whole point is the contiguous steady state:
             # queue the zero-hop fused tier for residents that reached it
             self._enqueue_contiguous_specializations()
+        if self.sanitize:
+            self._sanity_check()
         return moved
 
     def reconfigure(self, *, policy: PlacementPolicy | None = None,
@@ -1578,6 +1608,8 @@ class Overlay:
             if self.async_downloads and prefetch:
                 for wrapper in list(self._wrappers):
                     wrapper._prefetch_known()
+            if self.sanitize:
+                self._sanity_check()
         return self.describe()
 
     def _reconfigure_relocating(self, policy: PlacementPolicy | None,
@@ -1606,6 +1638,8 @@ class Overlay:
                     self._relocate_resident(res.rid, pl, ignore=plan_rids)
             self._last_placement = None
             self.stats.reconfigurations += 1
+            if self.sanitize:
+                self._sanity_check()
         return self.describe()
 
     # -- introspection ----------------------------------------------------------

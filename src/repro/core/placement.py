@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import Iterable, Sequence
+from typing import Iterable
 
 from repro.core.graph import Graph, Node
 from repro.core.patterns import TileClass

@@ -153,33 +153,52 @@ class DownloadScheduler:
         the cached kernel) that must never wait behind a full XLA compile.
         ``low=True`` routes the job to the background-optimization lane:
         workers only pick it up while the main queue is EMPTY, so a pending
-        download/relocation is never delayed by it (route specialization)."""
+        download/relocation is never delayed by it (route specialization).
+
+        Submitting against a shut-down scheduler returns an already-done
+        CANCELLED handle (observers still fire, with ``result=None``) —
+        callers pre-check ``closed`` lock-free, so ``close()`` racing a
+        dispatch must degrade to "download never happened", not an
+        exception on the dispatching thread."""
         if priority and low:
             raise ValueError("a job cannot be both priority and low")
         handle = DownloadHandle(key=key, kind=kind)
+        rejected = False
         with self._cond:
             if self._shutdown:
-                raise RuntimeError("scheduler is shut down")
-            job = self._jobs.get(key)
-            if job is not None and not job.stale:
-                job.handles.append((handle, on_done))
-                handle.status = job.state
-                self.stats.coalesced += 1
-                return handle
-            job = _Job(key, work, commit)
-            job.handles.append((handle, on_done))
-            self._jobs[key] = job
-            if priority:
-                self._queue.appendleft(job)
-                self.stats.priority_jobs += 1
-            elif low:
-                self._low.append(job)
-                self.stats.low_jobs += 1
+                # shutdown-race fix: callers pre-check ``closed`` lock-free,
+                # so ``close()`` can land between the check and the submit.
+                # That race is benign — answer with an already-cancelled
+                # handle (exactly what submit-then-flush would yield)
+                # instead of blowing up the submitting dispatch thread.
+                handle.status = _CANCELLED
+                handle._event.set()
+                self.stats.cancelled += 1
+                rejected = True
             else:
-                self._queue.append(job)
-            self.stats.submitted += 1
-            self._ensure_workers()
-            self._cond.notify()
+                job = self._jobs.get(key)
+                if job is not None and not job.stale:
+                    job.handles.append((handle, on_done))
+                    handle.status = job.state
+                    self.stats.coalesced += 1
+                    return handle
+                job = _Job(key, work, commit)
+                job.handles.append((handle, on_done))
+                self._jobs[key] = job
+                if priority:
+                    self._queue.appendleft(job)
+                    self.stats.priority_jobs += 1
+                elif low:
+                    self._low.append(job)
+                    self.stats.low_jobs += 1
+                else:
+                    self._queue.append(job)
+                self.stats.submitted += 1
+                self._ensure_workers()
+                self._cond.notify()
+        if rejected and on_done is not None:
+            # observers run outside the scheduler lock (``_finish`` contract)
+            on_done(None, handle)
         return handle
 
     def _ensure_workers(self) -> None:

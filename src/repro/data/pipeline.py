@@ -101,7 +101,6 @@ class Prefetcher:
     """Double-buffered prefetch wrapper around a batch iterator."""
 
     def __init__(self, it: Iterator[dict], depth: int = 2):
-        import collections
         import threading
         import queue
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)

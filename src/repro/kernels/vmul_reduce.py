@@ -15,7 +15,6 @@ dtype (bf16-safe).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ DESIGN.md §5.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

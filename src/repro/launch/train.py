@@ -15,11 +15,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.archs import smoke_config
-from repro.data.pipeline import SyntheticLM, make_batch
+from repro.data.pipeline import make_batch
 from repro.models import model as mdl
 from repro.models import params as pm
 from repro.models.transformer import model_spec

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,6 @@ import jax.numpy as jnp
 from repro import sharding as shd
 from repro.configs.base import ArchConfig
 from repro.kernels import ops as kops
-from repro.models import params as pm
 from repro.models.params import ParamSpec, dense, norm_scale
 
 # attention implementation selector:

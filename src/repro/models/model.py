@@ -9,8 +9,6 @@ exactly the way the paper assembles accelerators from bitstreams
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

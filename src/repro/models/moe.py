@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro import compat
 from repro import sharding as shd
 from repro.configs.base import ArchConfig
-from repro.models import params as pm
 from repro.models.params import ParamSpec, dense
 
 

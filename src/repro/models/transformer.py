@@ -14,7 +14,6 @@ main activation-memory knob for the 4k-train shapes.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -10,7 +10,7 @@ trainable on 16 GB/chip).  Moments are f32 regardless of param dtype
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

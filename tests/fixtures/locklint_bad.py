@@ -1,0 +1,50 @@
+"""Deliberately broken concurrency patterns for the locklint self-test.
+
+Never imported by the runtime or the test suite — this file exists so CI
+can prove ``repro.analysis.locklint`` detects every rule it advertises:
+
+* ``Left.a`` acquires Left._lock then Right._lock; ``Right.b`` acquires
+  them in the opposite order — a deadlock-capable lock-order cycle.
+* ``Right.unlocked_write`` mutates ``_table`` (registered shared state via
+  ``__locklint_shared__``) with no lock held.
+* ``Right.slow_hold`` calls ``time.sleep`` while holding a lock.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+
+class Right:
+    # register _table as shared-mutable, owned by Right._lock, without
+    # touching the lint's built-in registry
+    __locklint_shared__ = {"_table": "Right._lock"}
+
+    def __init__(self, left: "Left | None" = None) -> None:
+        self._lock = threading.Lock()
+        self.left = left
+        self._table: dict[str, int] = {}
+
+    def b(self) -> None:
+        with self._lock:
+            with self.left._lock:  # Right -> Left: inverts Left.a
+                pass
+
+    def unlocked_write(self, key: str, value: int) -> None:
+        self._table[key] = value  # shared write, nothing held
+
+    def slow_hold(self) -> None:
+        with self._lock:
+            time.sleep(0.01)  # blocking call under a lock
+
+
+class Left:
+    def __init__(self, right: Right) -> None:
+        self._lock = threading.Lock()
+        self.right = right
+
+    def a(self) -> None:
+        with self._lock:
+            with self.right._lock:  # Left -> Right
+                pass

@@ -1,0 +1,228 @@
+"""Invariant checkers (repro.analysis.check): green on the live runtime,
+loud on corrupted state, and the describe() schema contract."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import check
+from repro.analysis.check import InvariantError
+from repro.core import Overlay
+from repro.core.fleet import FleetOverlay
+
+
+def _overlay_with_residents(n=2, **kwargs):
+    ov = Overlay(3, 3, **kwargs)
+    fns = []
+    x = jnp.ones((4, 4))
+    for i in range(n):
+        scale = float(i + 1)
+        f = ov.jit(lambda a, b, s=scale: jnp.sum(a * b) * s,
+                   name=f"chk{i}", tile_budget=2)
+        f(x, x)
+        fns.append(f)
+    return ov, fns, x
+
+
+# ---------------------------------------------------------------------------
+# green on the real runtime
+# ---------------------------------------------------------------------------
+def test_checkers_green_on_live_overlay():
+    ov, _fns, x = _overlay_with_residents()
+    assert check.check_overlay(ov) == []
+    ov.defragment()
+    assert check.check_overlay(ov) == []
+    ov.reconfigure(relocate=True)
+    assert check.check_overlay(ov) == []
+    ov.evict("chk0")
+    assert check.check_overlay(ov) == []
+    ov.close()
+
+
+def test_checkers_green_on_live_fleet():
+    fleet = FleetOverlay(2, rows=3, cols=3)
+    g = fleet.jit(lambda a: jnp.sum(a) * 2.0, name="chk_fleet")
+    x = jnp.ones((4, 4))
+    for _ in range(4):
+        g(x)
+    with fleet._lock:
+        assert check.check_fleet(fleet) == []
+        assert check.check_fleet(fleet, pruned=False) == []
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every rule family fires on corrupted state
+# ---------------------------------------------------------------------------
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+def test_fabric_rules_fire_on_corruption():
+    ov, _fns, _x = _overlay_with_residents()
+    residents = list(ov.fabric._residents.values())
+    a, b = residents[0], residents[1]
+
+    keep = a.tiles
+    a.tiles = b.tiles
+    found = _rules(check.check_fabric(ov.fabric))
+    assert "fabric/tile-overlap" in found
+    assert "fabric/placement-tiles" in found
+    a.tiles = keep
+
+    a.tiles = frozenset([(99, 99)])
+    assert "fabric/tile-bounds" in _rules(check.check_fabric(ov.fabric))
+    a.tiles = keep
+
+    gen = a.generation
+    a.generation = 0
+    assert "fabric/generation-monotone" in \
+        _rules(check.check_fabric(ov.fabric))
+    a.generation = gen
+
+    a.live = False
+    assert "fabric/dead-resident" in _rules(check.check_fabric(ov.fabric))
+    a.live = True
+
+    ov.fabric._residents["bogus"] = a
+    assert "fabric/key-mismatch" in _rules(check.check_fabric(ov.fabric))
+    del ov.fabric._residents["bogus"]
+
+    assert check.check_fabric(ov.fabric) == []
+    ov.close()
+
+
+def test_entry_rules_fire_on_corruption():
+    ov, _fns, _x = _overlay_with_residents(n=1)
+    res = next(iter(ov.fabric._residents.values()))
+
+    cost = res.route_cost
+    res.route_cost = cost + 7
+    assert "entry/route-cost" in _rules(check.check_residency(ov))
+    res.route_cost = cost
+
+    zh = res.zero_hop
+    res.zero_hop = not zh
+    assert "entry/zero-hop" in _rules(check.check_residency(ov))
+    res.zero_hop = zh
+
+    routes = res.routes
+    res.routes = routes[:-1] if routes.shape[0] > 1 else \
+        jnp.concatenate([routes, routes])
+    assert "entry/routes-length" in _rules(check.check_residency(ov))
+    res.routes = routes
+
+    tier = res.tier
+    res.tier = "turbo"
+    assert "entry/spec-tier" in _rules(check.check_residency(ov))
+    res.tier = "specialized"           # without spec_fn: also a violation
+    assert "entry/spec-tier" in _rules(check.check_residency(ov))
+    res.tier = tier
+
+    assert check.check_residency(ov) == []
+    ov.close()
+
+
+def test_cache_rules_fire_on_corruption():
+    ov, _fns, _x = _overlay_with_residents(n=1)
+    res = next(iter(ov.fabric._residents.values()))
+
+    ov.cache._routes["ghost|[(0, (0, 0))]"] = object()
+    assert "cache/route-owner" in _rules(check.check_cache(ov))
+    del ov.cache._routes["ghost|[(0, (0, 0))]"]
+
+    desc = res.placement.descriptor()
+    assert ov.cache.has_route_program(res.rid, desc)
+    stale = f"{res.rid}|stale-desc"
+    ov.cache._routes[stale] = object()
+    assert "cache/route-owner" in _rules(check.check_cache(ov))
+    del ov.cache._routes[stale]
+
+    ov.cache._specialized["gone:0000|spec|0,0"] = object()
+    assert "cache/spec-orphan" in _rules(check.check_cache(ov))
+    del ov.cache._specialized["gone:0000|spec|0,0"]
+
+    assert check.check_cache(ov) == []
+    ov.close()
+
+
+def test_fleet_rules_fire_on_corruption():
+    fleet = FleetOverlay(2, rows=3, cols=3)
+    g = fleet.jit(lambda a: jnp.sum(a) * 3.0, name="chk_fleet_bad")
+    x = jnp.ones((4, 4))
+    g(x)
+    rec = next(iter(g._records.values()))
+
+    rep = rec.replicas[0]
+    keep = rec.replicas
+    rec.replicas = keep + (dataclasses.replace(rep),)
+    found = _rules(check.check_fleet(fleet))
+    assert "fleet/replica-dup" in found
+    rec.replicas = keep
+
+    rec.replicas = (dataclasses.replace(rep, member_index=7),)
+    assert "fleet/replica-index" in _rules(check.check_fleet(fleet))
+    rec.replicas = keep
+
+    rec.replicas = ()
+    assert "fleet/replica-empty" in _rules(check.check_fleet(fleet))
+    rec.replicas = keep
+
+    fleet._graph_homes["ghost"] = 9
+    assert "fleet/home-index" in _rules(check.check_fleet(fleet))
+    del fleet._graph_homes["ghost"]
+
+    assert check.check_fleet(fleet) == []
+    fleet.close()
+
+
+def test_ensure_raises_first_violation_with_rule():
+    v = [check.Violation("fabric/tile-overlap", "tile (0, 0) double-claimed"),
+         check.Violation("entry/route-cost", "later")]
+    with pytest.raises(InvariantError) as err:
+        check.ensure(v)
+    assert err.value.rule == "fabric/tile-overlap"
+    assert "double-claimed" in str(err.value)
+    check.ensure([])                      # no violations: no raise
+
+
+# ---------------------------------------------------------------------------
+# describe() schema stability (dashboards / planner contract)
+# ---------------------------------------------------------------------------
+def test_overlay_describe_schema_is_stable():
+    ov, _fns, _x = _overlay_with_residents()
+    assert check.check_overlay_describe(ov) == []
+    ov.close()
+
+
+def test_fleet_describe_schema_is_stable():
+    fleet = FleetOverlay(2, rows=3, cols=3)
+    g = fleet.jit(lambda a: jnp.sum(a) * 5.0, name="chk_desc")
+    x = jnp.ones((4, 4))
+    for _ in range(3):
+        g(x)
+    assert check.check_fleet_describe(fleet) == []
+    fleet.close()
+
+
+def test_describe_schema_checker_detects_drift():
+    ov, _fns, _x = _overlay_with_residents(n=1)
+    d = ov.describe()
+    orig_describe = ov.describe
+
+    def drifted():
+        out = dict(orig_describe())
+        out.pop("fabric")
+        out["fabrik"] = d["fabric"]
+        return out
+
+    ov.describe = drifted
+    try:
+        rules = {v.rule for v in check.check_overlay_describe(ov)}
+        assert "describe/overlay-schema" in rules
+        assert "describe/fabric-schema" in rules
+    finally:
+        ov.describe = orig_describe
+    assert check.check_overlay_describe(ov) == []
+    ov.close()

@@ -5,13 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BitstreamCache, Graph, Opcode, Overlay, PlacementError,
+from repro.core import (BitstreamCache, Opcode, Overlay, PlacementError,
                         PlacementPolicy, TileGrid, assemble, branchy_graph,
                         compile_graph, place, place_dynamic, place_static,
                         run_program, saxpy_graph, vmul_reduce_graph)
 from repro.core import patterns
 from repro.core.isa import (BRANCH_OPS, INTERCONNECT_OPS, MEMREG_OPS,
-                            VECTOR_OPS, category)
+                            VECTOR_OPS)
 from repro.core.placement import manhattan, route
 
 

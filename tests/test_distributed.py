@@ -9,14 +9,12 @@ Covers the invariants the dry-run relies on:
   * a sharded train step == the single-device train step.
 """
 
-import json
 import os
 import re
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -2,7 +2,6 @@
 end-to-end driver, sharding rules."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

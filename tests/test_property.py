@@ -12,10 +12,9 @@ from hypothesis import given, settings, strategies as st
 # hypothesis sweeps take minutes; the tier-1 CI lane skips them
 pytestmark = pytest.mark.slow
 
-from repro.core import (Graph, Overlay, PlacementPolicy, TileGrid, assemble,
+from repro.core import (Graph, PlacementPolicy, TileGrid, assemble,
                         compile_graph, place, run_program)
 from repro.core import patterns
-from repro.core.isa import category
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.models import moe as moe_lib

@@ -1,0 +1,189 @@
+"""Sanitizer mode (DESIGN.md §10): the invariant suite runs at every
+mutation edge.  On the real runtime it must stay silent under a thread
+race of dispatch/relocate/evict/prefetch; on a corrupted ledger it must
+fire and name the rule."""
+
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.check import InvariantError
+from repro.core import Overlay
+from repro.core.placement import PlacementError
+
+
+def _build(n_fns, **overlay_kwargs):
+    ov = Overlay(3, 3, sanitize=True, **overlay_kwargs)
+    x = jnp.ones((4, 4))
+    fns = []
+    for i in range(n_fns):
+        scale = float(i + 1)
+        fns.append(ov.jit(lambda a, b, s=scale: jnp.sum(a * b) * s,
+                          name=f"race{i}", tile_budget=2))
+    return ov, fns, x
+
+
+def _hammer(ov, fns, x, iters_per_thread, mutate_iters):
+    """≥4 dispatch threads racing one mutator thread; returns the errors."""
+    errors = []
+    start = threading.Barrier(len(fns) + 1)
+
+    def dispatcher(f):
+        start.wait()
+        for _ in range(iters_per_thread):
+            try:
+                f(x, x)
+            except InvariantError as exc:       # the bug class under test
+                errors.append(exc)
+                return
+            except PlacementError:
+                pass                            # pressure: legal, retry
+
+    def mutator():
+        start.wait()
+        for i in range(mutate_iters):
+            try:
+                op = i % 4
+                if op == 0:
+                    ov.evict(f"race{i % len(fns)}")
+                elif op == 1:
+                    ov.defragment()
+                elif op == 2:
+                    fns[i % len(fns)].prefetch(x, x)
+                else:
+                    ov.reconfigure(relocate=True, prefetch=False)
+            except InvariantError as exc:
+                errors.append(exc)
+                return
+            except PlacementError:
+                pass
+
+    threads = [threading.Thread(target=dispatcher, args=(f,)) for f in fns]
+    threads.append(threading.Thread(target=mutator))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not any(t.is_alive() for t in threads), "stress harness hung"
+    return errors
+
+
+def test_sanitizer_quiet_under_light_race():
+    """Tier-1 smoke: 4 dispatch threads × 50 iters vs 24 mutations."""
+    ov, fns, x = _build(4)
+    errors = _hammer(ov, fns, x, iters_per_thread=50, mutate_iters=24)
+    assert errors == [], f"sanitizer fired on the real runtime: {errors[0]}"
+    ov.drain()
+    ov.close()
+
+
+def test_sanitizer_quiet_across_planned_repack():
+    """Regression: defragment()/reconfigure(relocate=True) move residents
+    one at a time with ``ignore=plan_rids``, so mid-plan the ledger passes
+    through legal transient overlap between movers.  The per-move sanitize
+    hook must not fire on that — the plan driver checks once at the end."""
+    ov, fns, x = _build(4)
+    for f in fns:
+        try:
+            f(x, x)
+        except PlacementError:
+            pass
+    ov.evict("race0")                       # open a hole, then compact
+    fns[1](x, x)                            # shuffle MRU order
+    ov.defragment()                         # would raise pre-fix
+    ov.reconfigure(relocate=True, prefetch=False)
+    from repro.analysis import check
+    assert check.check_overlay(ov) == []    # end state is fully consistent
+    ov.close()
+
+
+@pytest.mark.slow
+def test_sanitizer_quiet_under_sustained_race():
+    """The acceptance harness: ≥4 threads × dispatch/relocate/evict/
+    prefetch, ≥200 iterations each, async download pipeline on — zero
+    InvariantError."""
+    ov, fns, x = _build(4, async_downloads=True, download_workers=2)
+    errors = _hammer(ov, fns, x, iters_per_thread=250, mutate_iters=200)
+    assert errors == [], f"sanitizer fired on the real runtime: {errors[0]}"
+    ov.drain()
+    ov.close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: the sanitizer DOES fire on a corrupted ledger
+# ---------------------------------------------------------------------------
+def test_sanitizer_fires_on_corrupted_ledger():
+    ov, fns, x = _build(1)
+    fns[0](x, x)
+    res = next(iter(ov.fabric._residents.values()))
+    res.generation = 0                      # breaks generation monotonicity
+    g = ov.jit(lambda a, b: jnp.sum(a + b), name="fresh", tile_budget=2)
+    with pytest.raises(InvariantError) as err:
+        g(x, x)                             # admit edge runs the checkers
+    assert err.value.rule == "fabric/generation-monotone"
+    ov.close()
+
+
+def test_sanitizer_fires_on_tile_corruption_at_evict():
+    ov, fns, x = _build(2)
+    fns[0](x, x)
+    fns[1](x, x)
+    residents = list(ov.fabric._residents.values())
+    residents[0].tiles = frozenset([(99, 99)])   # off-grid claim
+    with pytest.raises(InvariantError) as err:
+        ov.evict("race1")                   # evict edge sees resident 0
+    assert err.value.rule in ("fabric/tile-bounds",
+                              "fabric/placement-tiles")
+    ov.close()
+
+
+# ---------------------------------------------------------------------------
+# wiring: env opt-in, zero work when off
+# ---------------------------------------------------------------------------
+def test_sanitize_defaults_off_and_env_opt_in(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert Overlay(2, 2).sanitize is False
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert Overlay(2, 2).sanitize is True
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert Overlay(2, 2).sanitize is False
+    monkeypatch.delenv("REPRO_SANITIZE")
+    assert Overlay(2, 2, sanitize=True).sanitize is True
+
+
+def test_sanitizer_adds_no_work_when_disabled(monkeypatch):
+    """The hooks are flag-guarded: with sanitize off, the checker module
+    is never even imported by a dispatch/admit/evict cycle."""
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    ov = Overlay(3, 3)
+    calls = []
+    monkeypatch.setattr(Overlay, "_sanity_check",
+                        lambda self: calls.append(1))
+    f = ov.jit(lambda a, b: jnp.sum(a * b), name="off", tile_budget=2)
+    x = jnp.ones((4, 4))
+    f(x, x)
+    f(x, x)
+    ov.evict("off")
+    assert calls == []
+    ov.close()
+
+
+def test_fleet_inherits_sanitize_from_members(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    from repro.core.fleet import FleetOverlay
+
+    fleet = FleetOverlay(2, rows=3, cols=3, window=3, replicate_after=2,
+                         drain_below=1, sanitize=True)
+    assert fleet.sanitize is True
+    assert all(m.sanitize for m in fleet.members)
+    g = fleet.jit(lambda a: jnp.sum(a) * 2.0, name="fleet_san")
+    x = jnp.ones((4, 4))
+    for _ in range(7):
+        g(x)                    # crosses ≥2 rebalance edges (window=3)
+    assert fleet.stats.rebalances >= 2     # the fleet hook actually ran
+    fleet.close()
+
+    quiet = FleetOverlay(2, rows=3, cols=3)
+    assert quiet.sanitize is False
+    quiet.close()

@@ -456,3 +456,20 @@ def test_mesh_overlay_forces_synchronous_mode():
     mesh = jax.make_mesh((1,), ("tiles",))
     ov = Overlay(3, 3, mesh=mesh, async_downloads=True)
     assert not ov.async_downloads              # sharded assembly stays sync
+
+
+def test_submit_after_shutdown_returns_cancelled_handle():
+    # Regression: submit() used to pre-check _shutdown outside the critical
+    # section, so a shutdown landing between the check and the enqueue left
+    # the job queued on a dead scheduler — waiters hung, observers never
+    # fired.  Now the race is decided under _cond: a post-shutdown submit
+    # returns an already-done CANCELLED handle and still calls on_done.
+    s = DownloadScheduler()
+    s.shutdown(wait=True)
+    seen = []
+    h = s.submit("late", lambda: 1, lambda r, dt: r,
+                 on_done=lambda r, hh: seen.append((r, hh.status)))
+    assert h.status == "cancelled"
+    assert h.wait(1)                       # event pre-set: no hang
+    assert seen == [(None, "cancelled")]
+    assert s.stats.cancelled == 1

@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.configs.archs import smoke_config
-from repro.data.pipeline import SyntheticLM, make_batch
+from repro.data.pipeline import SyntheticLM
 from repro.models import model as mdl
 from repro.models import params as pm
 from repro.models.transformer import model_spec
