@@ -39,8 +39,10 @@ def _make_fn(i: int):
 
 
 def _drive(working_set: int, rounds: int = 3, n: int = 4096,
-           auto_defragment: bool = False) -> dict:
-    ov = Overlay(3, 3, auto_defragment=auto_defragment)
+           auto_defragment: bool = False,
+           cost_model: bool = False) -> dict:
+    ov = Overlay(3, 3, auto_defragment=auto_defragment,
+                 cost_model_placement=cost_model)
     a = jax.random.normal(jax.random.PRNGKey(0), (n,))
     b = jax.random.normal(jax.random.PRNGKey(1), (n,))
     fns = [ov.jit(_make_fn(i), name=f"acc{i}") for i in range(working_set)]
@@ -92,6 +94,18 @@ def main(smoke: bool = False) -> list[str]:
         "residency_churn/ws6_autodefrag_steady_call", st["median_us"],
         f"hit_rate={st['hit_rate']:.2f} reclaims={st['reclaims']} "
         f"downloads={st['downloads']} relocations={st['relocations']} "
+        f"util={st['utilization']:.2f}"))
+    # cost-model planner (DESIGN.md §11): candidate placements are scored
+    # by modeled seconds — under pressure the planner compacts incoming
+    # accelerators into the remaining free tiles instead of reclaiming, so
+    # the over-capacity working set co-resides and LRU's adversarial
+    # rotation stops thrashing (hit rate must be >= first-fit's, with
+    # fewer reclaims)
+    st = _drive(6, rounds=rounds, n=n, cost_model=True)
+    rows.append(row(
+        "residency_churn/ws6_planner_steady_call", st["median_us"],
+        f"hit_rate={st['hit_rate']:.2f} reclaims={st['reclaims']} "
+        f"downloads={st['downloads']} residents={st['residents']} "
         f"util={st['utilization']:.2f}"))
     return rows
 

@@ -76,12 +76,72 @@ def _live_section() -> int:
     sections.append(("fleet describe()", check.check_fleet_describe(fleet)))
     fleet.close()
 
+    failures += _store_section()
+
     for name, violations in sections:
         print(f"  {'FAIL' if violations else 'ok  '}  {name}: "
               f"{len(violations)} violation(s)")
         for v in violations:
             print(f"    {v.rule}: {v.message}")
         failures += len(violations)
+    return failures
+
+
+def _store_section() -> int:
+    """Exercise the persistent bitstream store end-to-end (DESIGN.md §11):
+    cold boot persists, warm boot loads, a garbled entry cold-compiles.
+    Prints the store's own stats so drift (format bumps, silent failures)
+    shows up in the report."""
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.core.overlay import Overlay
+    from repro.core.store import BitstreamStore
+
+    print("== bitstream store ==")
+    failures = 0
+    x = jnp.ones((8, 8))
+    with tempfile.TemporaryDirectory(prefix="repro-report-store-") as d:
+        ov = Overlay(3, 3, store_path=d)
+        f = ov.jit(lambda a, b: jnp.sum(a * b), name="audit_store")
+        cold = f(x, x)
+        ov.drain()
+        ov.close()
+        saves = ov.store.stats.saves
+        ok = saves >= 1
+        failures += 0 if ok else 1
+        print(f"  {'ok  ' if ok else 'FAIL'}  cold boot persisted: "
+              f"{saves} save(s), {len(ov.store.keys())} entr(ies)")
+
+        ov2 = Overlay(3, 3, store_path=d)
+        f2 = ov2.jit(lambda a, b: jnp.sum(a * b), name="audit_store")
+        warm = f2(x, x)
+        hits = ov2.cache.stats.store_hits
+        ok = hits >= 1 and bool((cold == warm).all())
+        failures += 0 if ok else 1
+        print(f"  {'ok  ' if ok else 'FAIL'}  warm boot loaded: "
+              f"{hits} store hit(s), "
+              f"{ov2.cache.stats.store_load_seconds * 1e3:.1f} ms, "
+              f"bit-identical={bool((cold == warm).all())}")
+        ov2.close()
+
+        store = BitstreamStore(d)
+        for k in store.keys():
+            with open(store._path_for(k), "r+b") as fh:   # garble payloads
+                fh.seek(-1, 2)
+                fh.write(b"\x00")
+        ov3 = Overlay(3, 3, store_path=d)
+        f3 = ov3.jit(lambda a, b: jnp.sum(a * b), name="audit_store")
+        garbled = f3(x, x)
+        ok = (ov3.cache.stats.store_hits == 0
+              and ov3.store.stats.load_failures >= 1
+              and bool((cold == garbled).all()))
+        failures += 0 if ok else 1
+        print(f"  {'ok  ' if ok else 'FAIL'}  garbled entry cold-compiled: "
+              f"{ov3.store.stats.load_failures} load failure(s), "
+              f"bit-identical={bool((cold == garbled).all())}")
+        ov3.close()
     return failures
 
 

@@ -289,7 +289,8 @@ _OVERLAY_DESCRIBE_KEYS = frozenset({
     "traces", "trace_seconds", "downloads", "evictions", "reclaims",
     "defrags", "relocations", "defrag_failures", "async_downloads",
     "cost_aware_reclaim", "prefetches", "prefetch_hits", "fallback_calls",
-    "stale_downloads", "scheduler",
+    "stale_downloads", "scheduler", "store", "cost_model_placement",
+    "autotune_thresholds", "defrag_threshold",
 })
 _FABRIC_DESCRIBE_KEYS = frozenset({
     "tiles", "tiles_used", "tiles_free", "utilization", "fragmentation",
@@ -353,7 +354,7 @@ def check_fleet_describe(fleet: Any) -> list[Violation]:
     """``FleetOverlay.describe()`` keeps its schema too."""
     d = fleet.describe()
     out = _key_diff("describe/fleet-schema", "describe()",
-                    set(d), frozenset({"members", "fleet"}))
+                    set(d), frozenset({"members", "fleet", "store"}))
     want = _FLEET_DESCRIBE_KEYS | frozenset(dataclasses.asdict(fleet.stats))
     flt = d.get("fleet") if isinstance(d.get("fleet"), dict) else {}
     out += _key_diff("describe/fleet-schema", "describe()['fleet']",

@@ -14,6 +14,7 @@ Public API (frontend first — the paper's programming model):
   fabric.Fabric / ResidentAccelerator         — shared-fabric tile residency
   scheduler.DownloadScheduler                 — async PR-download pipeline
   fleet.FleetOverlay                          — multi-fabric fleet serving
+  store.BitstreamStore                        — persistent on-disk bitstreams
 """
 
 from repro.core.cache import (BitstreamCache, SpecializationStats, aot_compile,
@@ -39,16 +40,18 @@ from repro.core.placement import (Placement, PlacementError, PlacementPolicy,
                                   TileGrid, check_assignment, place,
                                   place_dynamic, place_static)
 from repro.core.scheduler import DownloadHandle, DownloadScheduler
+from repro.core.store import BitstreamStore, StoreStats
 from repro.core.trace import Lowered, TraceError, trace_to_graph
 
 __all__ = [
-    "AssembledAccelerator", "BitstreamCache", "DownloadHandle",
+    "AssembledAccelerator", "BitstreamCache", "BitstreamStore",
+    "DownloadHandle",
     "DownloadScheduler", "Fabric", "FabricError",
     "FleetJitAssembled", "FleetOverlay", "FleetStats",
     "Graph", "Instruction",
     "JitAssembled", "LIBRARY", "Lowered", "Opcode", "Operator", "Overlay",
     "Placement", "PlacementError", "PlacementPolicy", "Program",
-    "ResidentAccelerator", "SpecializationStats", "TileClass",
+    "ResidentAccelerator", "SpecializationStats", "StoreStats", "TileClass",
     "TileGrid", "TraceError", "aot_compile", "assemble", "assemble_sharded",
     "bind_routes", "branchy_graph", "build_kernel", "cache_key",
     "check_assignment", "compile_compute", "compile_graph", "compile_routes",

@@ -114,6 +114,12 @@ class CacheStats:
     insertions: int = 0            # entries ever stored (miss-compiles + puts)
     evictions: int = 0
     compile_seconds: float = 0.0   # total "PR download" time paid
+    # persistent-store tier (DESIGN.md §11): misses satisfied by a disk load
+    # instead of a cold compile, and the (near-zero) time those loads took.
+    # A store hit still counts as a `miss` above — the in-memory cache DID
+    # miss — so `hit_rate` keeps meaning "served without any download".
+    store_hits: int = 0
+    store_load_seconds: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -199,6 +205,18 @@ class BitstreamCache:
         a background download is still a download."""
         self.stats.misses += 1
         self.stats.compile_seconds += compile_seconds
+        self.put(key, exe)
+
+    def insert_loaded(self, key: str, exe: Any, load_seconds: float) -> None:
+        """Store an executable deserialized from the persistent bitstream
+        store.  Booked as a miss (the in-memory cache did miss) whose
+        "download" cost is the disk-load time — near zero, which is exactly
+        what teaches the download-cost EWMA that this artifact is cheap to
+        bring back (the placement planner prices reclaims off that)."""
+        self.stats.misses += 1
+        self.stats.compile_seconds += load_seconds
+        self.stats.store_hits += 1
+        self.stats.store_load_seconds += load_seconds
         self.put(key, exe)
 
     def peek(self, key: str) -> Any:

@@ -113,6 +113,10 @@ class Fabric:
         self._generation = 0
         self._download_counts: dict[str, int] = {}   # per-rid, survives evict
         self._download_costs: dict[str, float] = {}  # rid -> measured compile s
+        # per-rid dispatch-latency history, stashed at release and re-seeded
+        # at admit — like the cost EWMA, latency measurements price the
+        # accelerator, not one residency, so eviction must not erase them.
+        self._dispatch_states: dict[str, dict] = {}
 
     def reset(self, grid: TileGrid | None = None) -> list[ResidentAccelerator]:
         """Flush every resident (optionally swapping the grid) while keeping
@@ -177,8 +181,16 @@ class Fabric:
             return None
         return min(self._residents.values(), key=lambda r: r.last_used)
 
+    def mean_download_cost(self) -> float:
+        """Mean of the measured per-rid re-download costs (0.0 when nothing
+        has been measured) — the planner's neutral price for unknowns."""
+        known = [c for c in self._download_costs.values() if c > 0.0]
+        return sum(known) / len(known) if known else 0.0
+
     def reclaim_victim(self, *, cost_aware: bool = False,
                        prefer: "Callable[[ResidentAccelerator], bool] | None"
+                       = None,
+                       price: "Callable[[ResidentAccelerator], float] | None"
                        = None) -> ResidentAccelerator | None:
         """The resident to reclaim under placement pressure.
 
@@ -199,6 +211,12 @@ class Fabric:
         (fleet reclaim uses this to sacrifice replicated residents — copies
         that live on another fabric too — before any sole copy).  If none
         satisfies it, the full pool is scored as usual.
+
+        ``price`` overrides the re-download price of a resident (seconds) —
+        the cost-model planner passes a store-aware pricer here, so a
+        resident whose kernels can be reloaded from the persistent bitstream
+        store is nearly free to reclaim regardless of what its original
+        compile cost.
         """
         if not self._residents:
             return None
@@ -215,7 +233,11 @@ class Fabric:
 
         def score(r: ResidentAccelerator) -> float:
             age = now - r.last_used
-            cost = self._download_costs.get(r.rid) or r.download_cost or prior
+            if price is not None:
+                cost = price(r)
+            else:
+                cost = (self._download_costs.get(r.rid) or r.download_cost
+                        or prior)
             return age / (cost + 1e-3)
 
         return max(pool, key=score)
@@ -265,6 +287,9 @@ class Fabric:
             download_cost=self._download_costs.get(rid, 0.0),
             admit_generation=self._generation,
             dispatch_hist=Histogram())
+        state = self._dispatch_states.get(rid)
+        if state is not None:
+            res.dispatch_hist = Histogram.from_state(state)
         self._residents[rid] = res
         return res
 
@@ -288,14 +313,80 @@ class Fabric:
         res = self._residents.pop(rid, None)
         if res is not None:
             res.live = False          # dispatch records invalidate instantly
+            self._stash_dispatch(res)
         return res
 
     def release_all(self) -> list[ResidentAccelerator]:
         out = list(self._residents.values())
         for res in out:
             res.live = False
+            self._stash_dispatch(res)
         self._residents.clear()
         return out
+
+    def _stash_dispatch(self, res: ResidentAccelerator) -> None:
+        if res.dispatch_hist is not None and res.dispatch_hist.count:
+            self._dispatch_states[res.rid] = res.dispatch_hist.state()
+
+    # -- measurement ledger ---------------------------------------------------
+    def export_ledger(self) -> dict[str, Any]:
+        """Snapshot every cross-residency measurement — the download-cost
+        EWMA, download counts and per-rid dispatch-latency histogram states
+        (live residents included) — in the JSON shape the bitstream store
+        persists (``BitstreamStore.save_ledger``)."""
+        dispatch = dict(self._dispatch_states)
+        for res in self._residents.values():
+            if res.dispatch_hist is not None and res.dispatch_hist.count:
+                dispatch[res.rid] = res.dispatch_hist.state()
+        return {
+            "download_costs": {r: c for r, c in self._download_costs.items()},
+            "download_counts": dict(self._download_counts),
+            "dispatch": dispatch,
+        }
+
+    def seed_ledger(self, ledger: dict[str, Any]) -> int:
+        """Re-seed measurements from a persisted ledger (warm boot).
+
+        In-process measurements win: a rid that already has a live EWMA or
+        histogram keeps it.  Malformed rows are skipped — ledger data comes
+        off disk and must never break a boot.  Returns rows applied."""
+        applied = 0
+        costs = ledger.get("download_costs")
+        if isinstance(costs, dict):
+            for rid, cost in costs.items():
+                try:
+                    cost = float(cost)
+                except (TypeError, ValueError):
+                    continue
+                if cost >= 0.0 and rid not in self._download_costs:
+                    self._download_costs[rid] = cost
+                    res = self._residents.get(rid)
+                    if res is not None and res.download_cost == 0.0:
+                        res.download_cost = cost
+                    applied += 1
+        counts = ledger.get("download_counts")
+        if isinstance(counts, dict):
+            for rid, n in counts.items():
+                try:
+                    n = int(n)
+                except (TypeError, ValueError):
+                    continue
+                if n > self._download_counts.get(rid, 0):
+                    self._download_counts[rid] = n
+        dispatch = ledger.get("dispatch")
+        if isinstance(dispatch, dict):
+            for rid, state in dispatch.items():
+                if rid in self._dispatch_states or not isinstance(state, dict):
+                    continue
+                hist = Histogram.from_state(state)
+                if hist.count:
+                    self._dispatch_states[rid] = state
+                    res = self._residents.get(rid)
+                    if res is not None and res.dispatch_hist is not None \
+                            and not res.dispatch_hist.count:
+                        res.dispatch_hist = hist
+                    applied += 1
+        return applied
 
     def add_cache_key(self, rid: str, key: str) -> None:
         res = self._residents.get(rid)

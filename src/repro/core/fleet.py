@@ -48,6 +48,7 @@ from repro.core.fabric import ResidentAccelerator
 from repro.core.graph import Graph
 from repro.core.overlay import JitAssembled, Overlay
 from repro.core.placement import PlacementError
+from repro.core.store import BitstreamStore
 
 __all__ = ["FleetOverlay", "FleetJitAssembled", "FleetStats"]
 
@@ -225,6 +226,11 @@ class FleetOverlay:
         inside one window loses one replica (default ``replicate_after/4``
         — hysteresis, so a hovering rate doesn't flap).
       max_replicas: cap on live copies per signature (default: fleet size).
+      store/store_path: one shared :class:`~repro.core.store.BitstreamStore`
+        for the whole fleet — members persist into (and warm-boot from) a
+        single directory.  Sharing one in-process store object gives every
+        member the same store lock, so concurrent member persists serialize
+        at the index instead of racing on files.
       **overlay_kwargs: forwarded to every fleet-constructed member
         (``async_downloads=True`` gives the fleet background replication).
     """
@@ -235,10 +241,19 @@ class FleetOverlay:
                  replicate_after: int = 32,
                  drain_below: int | None = None,
                  max_replicas: int | None = None,
+                 store: "BitstreamStore | None" = None,
+                 store_path: "str | None" = None,
                  **overlay_kwargs: Any) -> None:
+        if store is not None and store_path is not None:
+            raise ValueError("pass store= or store_path=, not both")
+        if store is None and store_path is not None:
+            store = BitstreamStore(store_path)
+        self.store = store
         if isinstance(members, int):
             if members < 1:
                 raise ValueError("a fleet needs at least one member")
+            if store is not None:
+                overlay_kwargs = dict(overlay_kwargs, store=store)
             members = [Overlay(rows, cols, **overlay_kwargs)
                        for _ in range(members)]
         else:
@@ -246,9 +261,17 @@ class FleetOverlay:
                 raise ValueError(
                     "overlay kwargs only apply to fleet-constructed members; "
                     "configure explicit member overlays directly")
+            if store is not None:
+                raise ValueError(
+                    "a fleet store only applies to fleet-constructed "
+                    "members; pass store= to the explicit member overlays")
             members = list(members)
             if not members:
                 raise ValueError("a fleet needs at least one member")
+            stores = {id(m.store) for m in members if m.store is not None}
+            if len(stores) == 1:
+                self.store = next(m.store for m in members
+                                  if m.store is not None)
         self.members: list[Overlay] = members
         if window < 1:
             raise ValueError("window must be >= 1")
@@ -657,6 +680,8 @@ class FleetOverlay:
                     }
             return {
                 "members": [m.describe() for m in self.members],
+                "store": (self.store.describe()
+                          if self.store is not None else None),
                 "fleet": {
                     "size": len(self.members),
                     "window": self.window,

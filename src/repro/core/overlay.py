@@ -71,8 +71,10 @@ from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
 from repro.core.placement import (Coord, Placement, PlacementError,
                                   PlacementPolicy, TileGrid,
-                                  check_assignment, place)
+                                  candidate_placements, check_assignment,
+                                  place, score_placement)
 from repro.core.scheduler import DownloadHandle, DownloadScheduler
+from repro.core.store import BitstreamStore
 from repro.serving.metrics import Histogram
 
 # a persistently failing background compile stops being retried after this
@@ -597,6 +599,25 @@ class Overlay:
       specialize_after: dispatch-stability threshold for the non-contiguous
         trigger (a placement that keeps its routes this many hits in a row
         is worth baking them into).
+      store / store_path: attach a persistent :class:`BitstreamStore`
+        (DESIGN.md §11) — compiled kernel artifacts are serialized to disk
+        on the scheduler's low lane, and a fresh overlay pointed at the
+        same directory warms its cache from disk instead of recompiling
+        (warm restarts; fleet members share one store).  Store-attached
+        overlays compile eagerly on the sync path (lazy jit wrappers don't
+        serialize).  Pass an existing ``store`` instance to share it, or
+        ``store_path`` to open/create one.
+      cost_model_placement: replace first-fit packing with the cost-model
+        planner (DESIGN.md §11) — candidate placements at several footprint
+        budgets are scored in seconds-equivalent cost (measured per-hop
+        dispatch latency, co-location crowding, tile scarcity), and
+        pressure reclaims pick the victim with the cheapest modeled
+        re-download (near-zero for store-backed residents).  Defaults to
+        on iff a store is attached.
+      autotune_thresholds: re-derive ``specialize_after`` and the
+        auto-defragment trigger from live measurements instead of the
+        fixed defaults (DESIGN.md §11).  Defaults to on iff a store is
+        attached.
     """
 
     def __init__(self, rows: int = 3, cols: int = 3, *,
@@ -611,7 +632,11 @@ class Overlay:
                  cost_aware_reclaim: bool | None = None,
                  auto_specialize: bool | None = None,
                  specialize_after: int = 32,
-                 sanitize: bool | None = None) -> None:
+                 sanitize: bool | None = None,
+                 store: "BitstreamStore | None" = None,
+                 store_path: "str | None" = None,
+                 cost_model_placement: bool | None = None,
+                 autotune_thresholds: bool | None = None) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
@@ -630,6 +655,24 @@ class Overlay:
             raise ValueError("specialize_after must be >= 1")
         self.specialize_after = int(specialize_after)
         self.scheduler = DownloadScheduler(workers=download_workers)
+        # persistent bitstream store + cost-model planner (DESIGN.md §11)
+        if store is not None and store_path is not None:
+            raise ValueError("pass store= or store_path=, not both")
+        if store is None and store_path is not None:
+            store = BitstreamStore(store_path)
+        self.store = store
+        self.cost_model_placement = ((store is not None)
+                                     if cost_model_placement is None
+                                     else bool(cost_model_placement))
+        self.autotune_thresholds = ((store is not None)
+                                    if autotune_thresholds is None
+                                    else bool(autotune_thresholds))
+        # adaptive auto-defragment gate (only consulted when autotuning):
+        # fragmentation fraction below which a post-reclaim defrag is skipped
+        self.defrag_threshold = 0.25
+        # consecutive admissions that each paid >=1 reclaim — the planner's
+        # churn detector (flips victim selection to anti-thrash MRU)
+        self._reclaim_streak = 0
         # sanitizer mode (DESIGN.md §10): run the repro.analysis.check
         # invariant suite at every mutation edge.  Off by default; the
         # dispatch fast path does ZERO extra work when disabled (hooks sit
@@ -654,6 +697,13 @@ class Overlay:
         # tiers) and total route hops per admitted/relocated placement
         self.dispatch_hist = Histogram()
         self.route_cost_hist = Histogram()
+        if self.store is not None:
+            # warm boot: re-seed the fabric's measurement ledger so the
+            # planner prices reclaims from history instead of starting blind
+            ledger = self.store.load_ledger()
+            if ledger:
+                with self._lock:
+                    self.fabric.seed_ledger(ledger)
 
     # -- async bookkeeping ----------------------------------------------------
     def _register(self, wrapper: "JitAssembled") -> None:
@@ -771,7 +821,12 @@ class Overlay:
         fabric is empty.  Victim order is LRU, or age-per-re-download-cost
         when ``cost_aware_reclaim`` is on.  A graph that cannot fit even an
         *empty* fabric is structurally unplaceable: it re-raises immediately
-        rather than evicting innocent residents first."""
+        rather than evicting innocent residents first.
+
+        With ``cost_model_placement`` the first-fit rule is replaced by the
+        cost-model planner (DESIGN.md §11)."""
+        if self.cost_model_placement:
+            return self._plan_with_cost_model(graph, fixed, tile_budget)
         probed = False
         while True:
             try:
@@ -792,8 +847,252 @@ class Overlay:
                     probed = True
                 self._evict_resident(victim.rid)
                 self.stats.reclaims += 1
-                if self.auto_defragment:
-                    self.defragment()
+                self._maybe_defragment()
+
+    # -- cost-model placement planner (DESIGN.md §11) -------------------------
+    # price priors (seconds) for quantities not yet measured in this process
+    _RECLAIM_PRIOR_S = 0.05       # unmeasured re-download (cold XLA compile)
+    _STORE_LOAD_PRIOR_S = 0.005   # unmeasured store load (deserialize)
+
+    def _reclaim_prior(self) -> float:
+        """Neutral re-download price: the mean measured cost, else a prior."""
+        mean = self.fabric.mean_download_cost()
+        return mean if mean > 0.0 else self._RECLAIM_PRIOR_S
+
+    def _planner_hop_cost(self) -> float:
+        """Per-hop steady-state price: a slice of the measured p50 dispatch
+        latency (route hops run as extra barrier/permute passes inside the
+        kernel), clamped; a fixed default until enough dispatches have
+        landed for the p50 to stop reflecting cold first calls (which pay
+        their download inline and would inflate the hop price 100x)."""
+        if self.dispatch_hist.count >= 16:
+            p50_s = self.dispatch_hist.percentile(0.5) * 1e-6
+            return min(1e-3, max(1e-5, 0.05 * p50_s))
+        return 1e-4
+
+    def _victim_price(self, res: ResidentAccelerator) -> float:
+        """Modeled cost of reclaiming ``res`` NOW: what the next admission
+        would pay to bring its kernels back.  Near-zero when every kernel it
+        owns is store-backed — the store hit replaces the cold compile —
+        which is the measurement that lets the planner prefer evicting warm
+        store-backed residents over compacting expensive cold ones."""
+        if self.store is not None and res.cache_keys \
+                and all(k in self.store for k in res.cache_keys):
+            st = self.cache.stats
+            if st.store_hits:
+                return st.store_load_seconds / st.store_hits
+            return self._STORE_LOAD_PRIOR_S
+        cost = self.fabric.download_cost(res.rid) or res.download_cost
+        return cost if cost > 0.0 else self._reclaim_prior()
+
+    def _plan_with_cost_model(self, graph: Graph,
+                              fixed: dict[int, Coord] | None,
+                              tile_budget: int | None) -> Placement:
+        """Cost-model replacement for first-fit: generate feasible candidate
+        placements at several footprint budgets and adopt the cheapest in
+        seconds-equivalent cost (hops at the measured per-hop price,
+        co-location crowding, tile scarcity) — the quadratic scarcity term
+        makes footprint increasingly expensive as the fabric fills, so
+        admissions *compact into fewer tiles instead of reclaiming*
+        whenever crowding is cheaper than the modeled re-download a
+        reclaim would cause.  When nothing fits at any budget, the victim with the
+        cheapest modeled re-download (store-aware: disk-backed kernels are
+        nearly free to bring back) is reclaimed and planning retries."""
+        probed = False
+        evicted = False
+        while True:
+            occ = self.fabric.occupied()
+            cands = candidate_placements(graph, self.grid, self.policy, fixed,
+                                         occupied=occ, max_tiles=tile_budget)
+            if cands:
+                # the streak counts CONSECUTIVE admissions that each paid a
+                # reclaim — the churn detector behind _select_victim_locked
+                self._reclaim_streak = (self._reclaim_streak + 1) if evicted \
+                    else 0
+                hop_s = self._planner_hop_cost()
+                return min(cands, key=lambda p: score_placement(
+                    p, hop_cost_s=hop_s, crowd_cost_s=2.0 * hop_s,
+                    occupied_tiles=len(occ), num_tiles=self.grid.num_tiles,
+                    tile_pressure_s=self._reclaim_prior()))
+            victim = self._select_victim_locked()
+            if victim is None:
+                # empty fabric and still unplaceable: let place() raise the
+                # structural PlacementError
+                return place(graph, self.grid, self.policy, fixed,
+                             occupied=occ, max_tiles=tile_budget)
+            if not probed:
+                # as in the first-fit path: a graph that cannot fit an empty
+                # fabric must not evict innocent residents first
+                place(graph, self.grid, self.policy, fixed,
+                      occupied=frozenset(), max_tiles=tile_budget)
+                probed = True
+            self._evict_resident(victim.rid)
+            evicted = True
+            self.stats.reclaims += 1
+            self._maybe_defragment()
+
+    def _select_victim_locked(self) -> "ResidentAccelerator | None":
+        """The planner's reclaim victim (caller holds the lock): normally
+        the fabric's cost-aware choice under the store-aware price, BUT
+        when every one of the last ``len(pool)`` admissions paid a reclaim
+        the working set has outgrown the fabric and age-based ordering is
+        the pathological policy — a cyclic rotation's LRU resident is
+        exactly the accelerator needed next, so every call misses.
+        Belady's rule for a loop longer than the cache is to evict the
+        entry whose next use is FARTHEST — the most recently used — which
+        pins a stable subset resident and converts part of every cycle
+        into hits.  Price still gates the flip: only residents within 2x
+        of the cheapest modeled re-download are MRU candidates, so an
+        expensive-to-rebuild resident is never sacrificed to the
+        heuristic."""
+        pool = list(self.fabric.residents.values())
+        if not pool:
+            return None
+        if self.reclaim_prefer is not None:
+            preferred = [r for r in pool if self.reclaim_prefer(r)]
+            if preferred:
+                pool = preferred
+        if self._reclaim_streak >= len(pool):
+            prices = {r.rid: self._victim_price(r) for r in pool}
+            cheapest = min(prices.values())
+            mru_pool = [r for r in pool
+                        if prices[r.rid] <= 2.0 * cheapest + 1e-9]
+            return max(mru_pool, key=lambda r: r.last_used)
+        return self.fabric.reclaim_victim(
+            cost_aware=True, prefer=self.reclaim_prefer,
+            price=self._victim_price)
+
+    def _maybe_defragment(self) -> None:
+        """Post-reclaim defragment gate.  Plain ``auto_defragment`` keeps
+        the fixed behavior (a pass after every reclaim); with
+        ``autotune_thresholds`` the pass only runs once the fabric-wide
+        fragmentation metric crosses an adaptive threshold, which
+        self-adjusts on observed usefulness: a pass that moved nobody
+        raises the bar, a pass that compacted lowers it."""
+        if not self.auto_defragment:
+            return
+        if not self.autotune_thresholds:
+            self.defragment()
+            return
+        if self.fabric.fragmentation() < self.defrag_threshold:
+            return
+        moved = self.defragment()
+        if moved == 0:
+            self.defrag_threshold = min(0.9,
+                                        self.defrag_threshold * 1.5 + 0.01)
+        else:
+            self.defrag_threshold = max(0.02, self.defrag_threshold * 0.75)
+
+    def _autotune_locked(self) -> None:
+        """Measurement-driven re-derivation of ``specialize_after`` (caller
+        holds the lock; no-op unless ``autotune_thresholds``): amortize the
+        measured mean specialize-compile cost over dispatches at the
+        measured p50 latency, assuming a conservative 25% per-dispatch
+        saving from the route-constant tier, clamped to [8, 512].  Cheap
+        compiles against slow dispatches specialize sooner; expensive
+        compiles against fast dispatches demand longer stability."""
+        if not self.autotune_thresholds:
+            return
+        ss = self.cache.spec_stats
+        if not ss.specializations or not self.dispatch_hist.count:
+            return
+        spec_cost = ss.compile_seconds / ss.specializations
+        p50_s = self.dispatch_hist.percentile(0.5) * 1e-6
+        if p50_s <= 0.0 or spec_cost <= 0.0:
+            return
+        self.specialize_after = min(512, max(8, int(spec_cost
+                                                    / (0.25 * p50_s))))
+
+    # -- persistent bitstream store (DESIGN.md §11) ---------------------------
+    def _store_load_locked(self, key: str):
+        """Try to satisfy a cache miss from the on-disk bitstream store
+        (caller holds the lock).  Returns ``(exe, seconds)`` on success and
+        books the load into the cache (as a miss that paid a store hit
+        instead of a compile), or ``None`` — plain miss, header/payload
+        validation failure, or deserialize failure — in which case the
+        caller cold-compiles.  A blob whose *executable* fails to
+        deserialize (e.g. XLA refused the payload) is expunged so the next
+        boot does not trip over it again."""
+        if self.store is None or self.mesh is not None:
+            return None
+        blob = self.store.load_blob(key)
+        if blob is None:
+            return None
+        t0 = time.perf_counter()
+        try:
+            exe = BitstreamStore.unpack_executable(blob)
+        except Exception as exc:  # noqa: BLE001 — any failure = cold compile
+            self.store.note_unusable(key)
+            logger.warning("bitstream store: entry for %r failed to "
+                           "deserialize (%s); cold compiling", key, exc)
+            return None
+        dt = time.perf_counter() - t0
+        self.cache.insert_loaded(key, exe, dt)
+        return exe, dt
+
+    def _persist_artifact_locked(self, key: str, exe) -> None:
+        """Queue ``exe`` for persistence over the scheduler's LOW lane
+        (caller holds the lock) — a persist never delays a demand
+        download.  Serialization (the expensive half) runs on a worker
+        with no locks held; the disk write commits back under the lock
+        only if the artifact is still cached (evicted-while-serializing
+        entries are dropped, not resurrected on disk)."""
+        if self.store is None or self.scheduler.closed \
+                or not isinstance(exe, jax.stages.Compiled) \
+                or key in self.store:
+            return
+        self.scheduler.submit(
+            f"persist:{key}",
+            lambda: BitstreamStore.pack_executable(exe),
+            lambda blob, dt: self._commit_persist(key, blob, "kernel"),
+            kind="persist", low=True)
+
+    def _commit_persist(self, key: str, blob: bytes, store_kind: str):
+        """Write a serialized artifact to the store (worker, takes the
+        lock).  Liveness-guarded like a download commit: persists only
+        entries the cache still serves, so an evict that raced the
+        serialization wins and the disk never holds a resurrected key."""
+        with self._lock:
+            if self.store is None:
+                return None
+            if store_kind == "specialized":
+                alive = self.cache.specialized(key) is not None
+            else:
+                alive = key in self.cache
+            if not alive:
+                return None
+            ok = self.store.save(key, blob, kind=store_kind)
+            if ok:
+                # piggyback the measurement ledger on every successful
+                # persist — restarts re-seed EWMA costs + latency histograms
+                self.store.save_ledger(self.fabric.export_ledger())
+            return ok or None
+
+    def _persist_spec_locked(self, pending: _PendingSpecialize) -> None:
+        """Queue the route-constant tier for persistence (caller holds the
+        lock).  The live spec tier is a warmed ``jax.jit`` — not
+        serializable — so the worker AOT-compiles the same route-constant
+        kernel into a ``Compiled`` for the disk copy (cheap: XLA's
+        compilation cache was just warmed by the live compile)."""
+        if self.store is None or self.scheduler.closed \
+                or self.mesh is not None or pending.spec_key in self.store:
+            return
+        self.scheduler.submit(
+            f"persist:{pending.spec_key}",
+            lambda: self._build_spec_blob(pending),
+            lambda blob, dt: self._commit_persist(pending.spec_key, blob,
+                                                  "specialized"),
+            kind="persist", low=True)
+
+    def _build_spec_blob(self, pending: _PendingSpecialize) -> bytes:
+        """Worker half of a spec persist (no locks held): AOT-compile the
+        route-constant kernel and serialize it."""
+        kernel = interp.specialize_kernel(pending.graph, pending.hops)
+        routes_aval = jax.ShapeDtypeStruct((len(pending.hops),), "int32")
+        exe = cache_lib.aot_compile(
+            kernel, (routes_aval,) + pending.avals,
+            jit_kwargs=cache_lib.kernel_jit_kwargs(pending.jit_kwargs))
+        return BitstreamStore.pack_executable(exe)
 
     def _kernel_key(self, graph: Graph, avals: tuple,
                     jit_kwargs: dict[str, Any] | None) -> str:
@@ -1072,6 +1371,27 @@ class Overlay:
         dispatches through a slow Python path while a warm jit function
         rides the C++ fast path.  Warming = one throwaway execution on
         zero inputs, which pays the XLA compile here in the background."""
+        if self.store is not None and self.mesh is None:
+            blob = self.store.load_blob(pending.spec_key)
+            if blob is not None:
+                try:
+                    t0 = time.perf_counter()
+                    exe = BitstreamStore.unpack_executable(blob)
+                    dt = time.perf_counter() - t0
+                except Exception as exc:  # noqa: BLE001 — cold compile below
+                    self.store.note_unusable(pending.spec_key)
+                    logger.warning(
+                        "bitstream store: specialized entry for %r failed "
+                        "to deserialize (%s); cold compiling",
+                        pending.spec_key, exc)
+                else:
+                    # a Compiled dispatches a touch slower than a warmed
+                    # jit, but skipping the route-constant XLA compile is
+                    # the far bigger win on a warm restart
+                    with self._lock:
+                        self.cache.stats.store_hits += 1
+                        self.cache.stats.store_load_seconds += dt
+                    return exe
         if self.mesh is not None:
             jitted = interp.wrap_sharded_specialized(
                 pending.graph, pending.hops, self.mesh, self.tile_axis)
@@ -1118,6 +1438,8 @@ class Overlay:
                     entry.record = _DispatchRecord(
                         fn=fn, res=res, generation=res.generation,
                         tier="specialized")
+            self._persist_spec_locked(pending)
+            self._autotune_locked()
             if self.sanitize:
                 self._sanity_check()
             return exe
@@ -1264,6 +1586,12 @@ class Overlay:
 
             base = acc
 
+            if self.store is not None and self.mesh is None:
+                # only eagerly-compiled executables serialize — a lazy
+                # jax.jit wrapper has nothing to persist, so a
+                # store-attached overlay always pays the download up front
+                aot = True
+
             if aot and self.mesh is None:
                 cached = self.cache.peek(key)
                 if cached is not None and \
@@ -1277,6 +1605,16 @@ class Overlay:
                 # pure hit — the kernel artifact is placement-free, so it
                 # serves this resident's CURRENT routes (post-relocation too)
                 exe = self.cache.get_or_compile(key, lambda: None)
+                self.fabric.add_cache_key(rid, key)
+                return dataclasses.replace(
+                    acc, fn=interp.bind_routes(exe, base.routes))
+            loaded = self._store_load_locked(key)
+            if loaded is not None:
+                # warm restart: the kernel came off disk instead of through
+                # XLA — booked as a store hit, and its (near-zero) load time
+                # is the resident's honest re-download cost
+                exe, load_dt = loaded
+                self.fabric.record_download_cost(rid, load_dt)
                 self.fabric.add_cache_key(rid, key)
                 return dataclasses.replace(
                     acc, fn=interp.bind_routes(exe, base.routes))
@@ -1306,6 +1644,7 @@ class Overlay:
                     # model with jitter
                     self.fabric.record_download_cost(rid, dt)
                 self.fabric.add_cache_key(rid, key)
+                self._persist_artifact_locked(key, exe)
                 # relocated while compiling? the kernel is still valid —
                 # rebind it to the resident's routes as they stand now
                 res_now = self.fabric.get(rid)
@@ -1358,11 +1697,19 @@ class Overlay:
                 self._prefetched.add(rid)
 
             exe = self.cache.peek(key)
+            cache_hit = exe is not None
+            if not cache_hit:
+                loaded = self._store_load_locked(key)
+                if loaded is not None:
+                    exe, load_dt = loaded
+                    self.fabric.record_download_cost(rid, load_dt)
             if exe is not None:
-                # kernel already in the store (possibly compiled for another
-                # placement — it is placement-free): bind this resident's
-                # routes and complete inline, no background work needed
-                self.cache.get_or_compile(key, lambda: exe)   # count the hit
+                # kernel already cached (possibly compiled for another
+                # placement — it is placement-free) or just loaded off
+                # disk: bind this resident's routes and complete inline,
+                # no background work needed
+                if cache_hit:
+                    self.cache.get_or_compile(key, lambda: exe)  # count hit
                 self.fabric.add_cache_key(rid, key)
                 handle = DownloadHandle(key=rid, kind=kind)
                 handle.result = dataclasses.replace(
@@ -1408,6 +1755,7 @@ class Overlay:
             self.cache.insert_compiled(pending.key, exe, seconds)
             self.fabric.add_cache_key(pending.rid, pending.key)
             self.fabric.record_download_cost(pending.rid, seconds)
+            self._persist_artifact_locked(pending.key, exe)
             res = self.fabric.get(pending.rid)
             base = pending.base
             if res.generation != pending.generation:
@@ -1435,15 +1783,28 @@ class Overlay:
         downloads and retire the scheduler's worker threads.  The overlay
         itself keeps serving — synchronous paths are unaffected, and async
         jit misses permanently serve their fallback (no new downloads
-        start).  Optional: idle workers also expire on their own."""
+        start).  Optional: idle workers also expire on their own.
+
+        With a store attached, queued persists drain FIRST (shutdown
+        flushes the queue, which would cancel them) and the measurement
+        ledger gets a final save — the whole point of closing cleanly is
+        the next boot finding everything on disk."""
+        if self.store is not None and not self.scheduler.closed:
+            self.scheduler.drain(timeout=30.0)
+            self.store.save_ledger(self.fabric.export_ledger())
         self.scheduler.shutdown(wait=True)
 
     # -- explicit PR-region management ----------------------------------------
-    def _evict_resident(self, rid: str) -> int:
+    def _evict_resident(self, rid: str, *, drop_store: bool = False) -> int:
         """THE evict path: release a resident's tiles, cancel any download
         (or pending relocation rebind) still in flight for it, and drop its
         kernel artifacts + route programs in one motion.  Returns cache
-        entries removed."""
+        entries removed.
+
+        ``drop_store`` additionally deletes the resident's on-disk
+        bitstreams; pressure reclaims leave them (a reclaimed-then-readmitted
+        accelerator re-downloading off disk IS the warm-restart win), while
+        an explicit :meth:`evict` call means "gone", disk included."""
         resident = self.fabric.release(rid)
         if resident is None:
             return 0
@@ -1453,6 +1814,14 @@ class Overlay:
         self.scheduler.cancel(f"relocate:{rid}")
         if resident.spec_job is not None:
             self.scheduler.cancel(resident.spec_job)
+        if self.store is not None and resident.cache_keys:
+            # in-flight persists must not resurrect the evictee on disk
+            # (the _commit_persist liveness guard backstops the race)
+            hops = interp.route_hops(resident.graph, resident.placement)
+            for k in resident.cache_keys:
+                self.scheduler.cancel(f"persist:{k}")
+                self.scheduler.cancel(
+                    f"persist:{cache_lib.spec_key(k, hops)}")
         # the route-constant tier dies with its resident even when the
         # generic kernel key survives via a sharing sibling
         self._drop_spec_artifacts(resident)
@@ -1467,6 +1836,11 @@ class Overlay:
                      for k in r.cache_keys}
         removed = self.cache.evict_keys(
             [k for k in resident.cache_keys if k not in live_keys])
+        if drop_store and self.store is not None:
+            for k in resident.cache_keys:
+                if k not in live_keys:
+                    self.store.delete(k)
+                    self.store.delete_prefix(f"{k}|spec|")
         if self.sanitize:
             self._sanity_check()
         return removed
@@ -1482,11 +1856,13 @@ class Overlay:
             removed = 0
             for rid in [r.rid for r in self.fabric.residents.values()
                         if r.name == name]:
-                removed += self._evict_resident(rid)
+                removed += self._evict_resident(rid, drop_store=True)
             # sweep bitstreams with no residency record (jit=False
             # assemblies, pre-eviction leftovers) so evict-by-name stays
             # exhaustive
             removed += self.cache.evict_prefix(f"{name}:")
+            if self.store is not None:
+                self.store.delete_prefix(f"{name}:")
             return removed
 
     def defragment(self) -> int:
@@ -1601,8 +1977,16 @@ class Overlay:
             # reset() keeps the generation counter monotonic: handles
             # assembled before the flush must not validate against
             # post-flush re-admissions
-            self.stats.evictions += len(self.fabric.reset(self.grid))
+            flushed = self.fabric.reset(self.grid)
+            self.stats.evictions += len(flushed)
             self.cache.clear()                    # stats survive the flush
+            if self.store is not None:
+                # a reconfigure drops the registries these bitstreams were
+                # placed for: their store entries must not survive to serve
+                # a future boot against the old configuration
+                for k in {k for r in flushed for k in r.cache_keys}:
+                    self.store.delete(k)
+                    self.store.delete_prefix(f"{k}|spec|")
             self._last_placement = None
             self.stats.reconfigurations += 1
             if self.async_downloads and prefetch:
@@ -1678,6 +2062,11 @@ class Overlay:
             "fallback_calls": self.stats.fallback_calls,
             "stale_downloads": self.stats.stale_downloads,
             "scheduler": self.scheduler.describe(),
+            "store": (self.store.describe()
+                      if self.store is not None else None),
+            "cost_model_placement": self.cost_model_placement,
+            "autotune_thresholds": self.autotune_thresholds,
+            "defrag_threshold": round(self.defrag_threshold, 4),
         }
 
 

@@ -333,6 +333,107 @@ def check_assignment(graph: Graph, grid: TileGrid,
             f"assignment missing op nodes {missing[:5]}")
 
 
+# -- cost-model planning (DESIGN.md §11) -------------------------------------
+#
+# First-fit packing treats every placement of a graph as equally good and
+# every reclaim as equally cheap.  The planner replaces that with candidates
+# scored in SECONDS-equivalent cost, combining what the overlay actually
+# measures: per-hop dispatch latency (PR 7 histograms), re-download prices
+# (the fabric's EWMA ledger — near-zero for store-backed artifacts), and how
+# scarce fabric real estate currently is.  The pure pieces live here; victim
+# simulation (which needs the fabric) stays in ``overlay.py``.
+
+def placement_crowding(placement: Placement) -> int:
+    """Co-location pressure: total ops beyond the first on each tile.  Two
+    ops sharing one PR region serialize — the compact candidates the planner
+    generates pay for their density here."""
+    per_tile: dict[Coord, int] = {}
+    for coord in placement.assignment.values():
+        per_tile[coord] = per_tile.get(coord, 0) + 1
+    return sum(n - 1 for n in per_tile.values() if n > 1)
+
+
+def placement_footprint(placement: Placement) -> int:
+    """Distinct tiles a placement claims."""
+    return len(set(placement.assignment.values()))
+
+
+def candidate_budgets(n_ops: int, max_tiles: int | None = None) -> list[int | None]:
+    """Footprint budgets worth scoring for an ``n_ops``-operator graph:
+    unconstrained (first-fit's spread), half-packed, and fully co-located.
+    All candidates respect a caller-imposed ``max_tiles`` cap."""
+    budgets: list[int | None] = [max_tiles]
+    for b in ((n_ops + 1) // 2, 1):
+        if b >= 1 and (max_tiles is None or b < max_tiles):
+            budgets.append(b)
+    out: list[int | None] = []
+    for b in budgets:
+        if b not in out:
+            out.append(b)
+    return out
+
+
+def candidate_placements(graph: Graph, grid: TileGrid, policy: PlacementPolicy,
+                         fixed: dict[int, Coord] | None = None, *,
+                         occupied: Iterable[Coord] = (),
+                         max_tiles: int | None = None) -> list[Placement]:
+    """Feasible placements at several footprint budgets (deduplicated by
+    descriptor).  Empty when nothing fits — the overlay then simulates
+    reclaims.  STATIC policy with pinned tiles has exactly one candidate."""
+    occupied = set(occupied)
+    if policy is PlacementPolicy.STATIC and fixed is not None:
+        try:
+            return [place_static(graph, grid, fixed, occupied=occupied,
+                                 max_tiles=max_tiles)]
+        except PlacementError:
+            return []
+    n_ops = len(graph.op_nodes())
+    out: list[Placement] = []
+    seen: set[str] = set()
+    for budget in candidate_budgets(n_ops, max_tiles):
+        try:
+            p = place(graph, grid, policy, fixed, occupied=occupied,
+                      max_tiles=budget)
+        except PlacementError:
+            continue
+        desc = p.descriptor()
+        if desc not in seen:
+            seen.add(desc)
+            out.append(p)
+    return out
+
+
+def score_placement(placement: Placement, *,
+                    hop_cost_s: float,
+                    crowd_cost_s: float,
+                    occupied_tiles: int,
+                    num_tiles: int,
+                    tile_pressure_s: float,
+                    victims_seconds: float = 0.0) -> float:
+    """Seconds-equivalent cost of adopting ``placement``.
+
+    ``victims_seconds``
+        total modeled re-download price of the residents that must be
+        reclaimed to make this placement feasible (0 when it fits as-is;
+        store-backed victims cost their disk-load time, near zero),
+    ``hop_cost_s`` × total route hops
+        steady-state routing penalty per dispatch horizon,
+    ``crowd_cost_s`` × :func:`placement_crowding`
+        serialization penalty of co-located operators,
+    footprint × (occupancy-after / tiles)² × ``tile_pressure_s``
+        opportunity cost of claiming scarce real estate: on an empty fabric
+        spreading out is free, near saturation every extra tile claimed is
+        a future reclaim someone else pays for.
+    """
+    footprint = placement_footprint(placement)
+    after = min(occupied_tiles + footprint, num_tiles)
+    pressure = (after / num_tiles) ** 2 if num_tiles else 0.0
+    return (victims_seconds
+            + hop_cost_s * placement.total_hops
+            + crowd_cost_s * placement_crowding(placement)
+            + tile_pressure_s * footprint * pressure)
+
+
 def place(graph: Graph, grid: TileGrid, policy: PlacementPolicy,
           fixed: dict[int, Coord] | None = None, *,
           occupied: Iterable[Coord] = (),

@@ -79,6 +79,7 @@ class SchedulerStats:
     failed: int = 0           # work() raised
     priority_jobs: int = 0    # jobs that jumped the queue (relocation commits)
     low_jobs: int = 0         # background-lane jobs (route specialization)
+    persist_jobs: int = 0     # store-persist jobs (always low lane)
     download_seconds: float = 0.0   # total background work time
 
 
@@ -193,6 +194,8 @@ class DownloadScheduler:
                     self.stats.low_jobs += 1
                 else:
                     self._queue.append(job)
+                if kind == "persist":
+                    self.stats.persist_jobs += 1
                 self.stats.submitted += 1
                 self._ensure_workers()
                 self._cond.notify()

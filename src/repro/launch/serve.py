@@ -51,6 +51,11 @@ def main(argv=None) -> int:
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="serve through a FleetOverlay of N member fabrics "
                          "(implies --overlay)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent bitstream store directory: compiled "
+                         "overlay kernels are serialized there and a "
+                         "restarted server warm-boots from disk instead of "
+                         "recompiling (implies --overlay)")
     ap.add_argument("--event-loop", action="store_true",
                     help="serve through the EventLoopEngine (chunked "
                          "bucketed prefill + SLO-aware admission)")
@@ -68,9 +73,12 @@ def main(argv=None) -> int:
 
     params = pm.init(model_spec(cfg), jax.random.PRNGKey(args.seed))
     if args.fleet > 0:
-        overlay = FleetOverlay(args.fleet, rows=3, cols=3)
+        overlay = FleetOverlay(args.fleet, rows=3, cols=3,
+                               store_path=args.store)
+    elif args.overlay or args.store is not None:
+        overlay = Overlay(3, 3, store_path=args.store)
     else:
-        overlay = Overlay(3, 3) if args.overlay else None
+        overlay = None
     if args.event_loop:
         from repro.serving import EventLoopEngine
         engine = EventLoopEngine(
@@ -104,6 +112,10 @@ def main(argv=None) -> int:
         print(f"[serve] overlay: {overlay.describe()}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
+    if overlay is not None:
+        # drains queued persists and saves the measurement ledger when a
+        # --store directory is attached
+        overlay.close()
     return 0
 
 

@@ -74,6 +74,48 @@ class Histogram:
             "max": round(self.max, 3),
         }
 
+    def state(self) -> dict:
+        """Full JSON-serializable state — lossless, unlike :meth:`summary`.
+
+        Used by the bitstream store's measurement ledger so a warm boot can
+        re-seed dispatch-latency histograms instead of starting blind."""
+        return {
+            "counts": list(self.counts),
+            "count": self.count,
+            "total": self.total,
+            "max": self.max,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Histogram":
+        """Rebuild from :meth:`state` output; malformed state (wrong types,
+        wrong bucket count) yields an empty histogram rather than raising —
+        ledger data comes off disk and must never break a boot."""
+        h = cls()
+        try:
+            counts = [int(c) for c in state["counts"]]
+            count = int(state["count"])
+            total = float(state["total"])
+            mx = float(state["max"])
+        except (KeyError, TypeError, ValueError):
+            return h
+        if len(counts) != _N_BUCKETS or count < 0 or any(c < 0 for c in counts):
+            return h
+        h.counts = counts
+        h.count = count
+        h.total = total
+        h.max = mx
+        return h
+
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram's observations into this one."""
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        if other.max > self.max:
+            self.max = other.max
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         s = self.summary()
         return (f"Histogram(count={s['count']}, p50={s['p50']}, "

@@ -31,12 +31,15 @@ def test_real_tree_is_clean(real_tree):
 def test_lock_order_graph_is_the_documented_one(real_tree):
     _kept, _waived, lint = real_tree
     graph = lint.lock_graph_summary()
-    assert graph["locks"] == ["DownloadScheduler._cond",
+    assert graph["locks"] == ["BitstreamStore._lock",
+                              "DownloadScheduler._cond",
                               "FleetOverlay._lock", "Overlay._lock"]
-    # fleet -> member -> scheduler, and nothing pointing backwards
+    # fleet -> member -> {scheduler, store}, and nothing pointing backwards
     assert graph["edges"] == [
+        "FleetOverlay._lock -> BitstreamStore._lock",
         "FleetOverlay._lock -> DownloadScheduler._cond",
         "FleetOverlay._lock -> Overlay._lock",
+        "Overlay._lock -> BitstreamStore._lock",
         "Overlay._lock -> DownloadScheduler._cond",
     ]
 

@@ -1,0 +1,446 @@
+"""Persistent bitstream store tests (DESIGN.md §11): warm-boot round trips,
+corrupt-entry tolerance (never crash, never serve stale), persist-vs-evict
+races, reconfigure invalidation, fleet members sharing one directory, the
+measurement-ledger re-seed, and the cost-model planner + autotuned
+thresholds that ride on the store's measurements."""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FleetOverlay, Overlay, saxpy_graph)
+from repro.core.store import _MAGIC, BitstreamStore, FORMAT_VERSION
+from repro.serving.metrics import Histogram
+
+
+def _mul_fn(scale=2.0, name="mulacc"):
+    def fn(a, b):
+        return jnp.sum(a * b) * scale
+    fn.__name__ = name
+    return fn
+
+
+def _drive_once(store_path, *, name="mulacc", scale=2.0, n=64, **ov_kwargs):
+    """One overlay boot: jit one accelerator, call it, drain, close."""
+    ov = Overlay(3, 3, store_path=store_path, **ov_kwargs)
+    f = ov.jit(_mul_fn(scale, name), name=name)
+    a = jnp.arange(n, dtype=jnp.float32)
+    b = jnp.ones((n,), jnp.float32)
+    out = jax.block_until_ready(f(a, b))
+    ov.drain()
+    ov.close()
+    return ov, np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# round trip: persist on first boot, load on the second
+# ---------------------------------------------------------------------------
+def test_warm_boot_round_trip(tmp_path):
+    d = str(tmp_path / "store")
+    ov1, out1 = _drive_once(d)
+    assert ov1.store.stats.saves >= 1
+    assert len(BitstreamStore(d).keys()) >= 1
+
+    ov2, out2 = _drive_once(d)
+    assert ov2.cache.stats.store_hits >= 1
+    assert ov2.cache.stats.store_load_seconds > 0.0
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_store_hit_is_not_a_cache_hit(tmp_path):
+    # a store load still counts as a cache MISS (the artifact was not in
+    # memory) — hit_rate keeps meaning "served without any download"
+    d = str(tmp_path / "store")
+    _drive_once(d)
+    ov2, _ = _drive_once(d)
+    assert ov2.cache.stats.store_hits >= 1
+    assert ov2.cache.stats.misses >= ov2.cache.stats.store_hits
+
+
+def test_store_survives_reclaim_but_not_evict(tmp_path):
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)
+    f = ov.jit(_mul_fn(2.0, "keepacc"), name="keepacc")
+    a = jnp.ones((32,), jnp.float32)
+    jax.block_until_ready(f(a, a))
+    ov.drain()
+    assert len(ov.store.keys()) >= 1
+
+    # explicit evict drops disk entries too
+    ov.evict("keepacc")
+    assert len(ov.store.keys()) == 0
+    ov.close()
+
+
+def test_describe_reports_store(tmp_path):
+    ov, _ = _drive_once(str(tmp_path / "store"))
+    desc = ov.describe()
+    assert desc["store"] is not None
+    assert desc["store"]["entries"] >= 1
+    assert desc["cost_model_placement"] is True    # store implies planner
+    assert desc["autotune_thresholds"] is True
+    # store-less overlays advertise the absence
+    assert Overlay(2, 2).describe()["store"] is None
+
+
+def test_store_and_store_path_are_exclusive(tmp_path):
+    st = BitstreamStore(str(tmp_path / "a"))
+    with pytest.raises(ValueError):
+        Overlay(3, 3, store=st, store_path=str(tmp_path / "b"))
+
+
+# ---------------------------------------------------------------------------
+# corrupt / truncated / mismatched entries: warn + cold compile, never crash
+# ---------------------------------------------------------------------------
+def _garble(path, mode):
+    with open(path, "rb") as fh:
+        data = bytearray(fh.read())
+    if mode == "truncate":
+        data = data[: len(data) // 2]
+    elif mode == "flip":
+        data[-3] ^= 0xFF                       # payload byte: checksum fails
+    elif mode == "magic":
+        data[:len(_MAGIC)] = b"X" * len(_MAGIC)
+    elif mode == "version":
+        hlen = int.from_bytes(data[len(_MAGIC):len(_MAGIC) + 4], "little")
+        off = len(_MAGIC) + 4
+        hdr = json.loads(bytes(data[off:off + hlen]))
+        hdr["format_version"] = FORMAT_VERSION + 999
+        new = json.dumps(hdr).encode()
+        data = (bytes(data[:len(_MAGIC)])
+                + len(new).to_bytes(4, "little") + new
+                + bytes(data[off + hlen:]))
+    elif mode == "jaxlib":
+        hlen = int.from_bytes(data[len(_MAGIC):len(_MAGIC) + 4], "little")
+        off = len(_MAGIC) + 4
+        hdr = json.loads(bytes(data[off:off + hlen]))
+        hdr["jaxlib"] = "0.0.0-not-this-runtime"
+        new = json.dumps(hdr).encode()
+        data = (bytes(data[:len(_MAGIC)])
+                + len(new).to_bytes(4, "little") + new
+                + bytes(data[off + hlen:]))
+    with open(path, "wb") as fh:
+        fh.write(bytes(data))
+
+
+@pytest.mark.parametrize("mode",
+                         ["truncate", "flip", "magic", "version", "jaxlib"])
+def test_garbled_entry_cold_compiles(tmp_path, mode, caplog):
+    d = str(tmp_path / "store")
+    _, out1 = _drive_once(d)
+    store = BitstreamStore(d)
+    keys = store.keys()
+    assert keys
+    for k in keys:
+        _garble(store._path_for(k), mode)
+
+    with caplog.at_level("WARNING", logger="repro.core.store"):
+        ov2, out2 = _drive_once(d)
+    # never served stale: cold compile produced the same numbers
+    np.testing.assert_array_equal(out1, out2)
+    assert ov2.cache.stats.store_hits == 0
+    assert ov2.store.stats.load_failures >= 1
+    assert any("cold compiling" in r.message for r in caplog.records)
+
+
+def test_pickle_garbage_payload_cold_compiles(tmp_path, caplog):
+    # a payload that passes the checksum but is not a pickled executable:
+    # unpack fails downstream -> note_unusable -> cold compile, entry gone
+    d = str(tmp_path / "store")
+    _, out1 = _drive_once(d)
+    store = BitstreamStore(d)
+    for k in store.keys():
+        store.save(k, b"not a pickle at all", kind="kernel")
+
+    with caplog.at_level("WARNING"):
+        ov2, out2 = _drive_once(d)
+    np.testing.assert_array_equal(out1, out2)
+    assert ov2.cache.stats.store_hits == 0
+    assert ov2.store.stats.load_failures >= 1
+
+
+def test_store_scan_ignores_foreign_files(tmp_path):
+    d = tmp_path / "store"
+    d.mkdir()
+    (d / "README.txt").write_text("not a bitstream")
+    (d / "junk.bits").write_bytes(b"garbage")
+    store = BitstreamStore(str(d))
+    assert store.keys() == []
+    assert store.load_blob("nope") is None
+
+
+# ---------------------------------------------------------------------------
+# persist vs evict races; reconfigure invalidation
+# ---------------------------------------------------------------------------
+def test_evict_cancels_inflight_persist(tmp_path):
+    """An evict racing a queued persist must not resurrect the key on disk:
+    the persist job is cancelled and the commit's liveness guard backstops
+    the window where serialization already ran."""
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)
+
+    # gate the low-lane serialize so the persist is reliably in flight
+    gate = threading.Event()
+    orig_pack = BitstreamStore.pack_executable
+
+    def gated_pack(exe):
+        gate.wait(30)
+        return orig_pack(exe)
+
+    f = ov.jit(_mul_fn(3.0, "raceacc"), name="raceacc")
+    a = jnp.ones((32,), jnp.float32)
+    try:
+        BitstreamStore.pack_executable = staticmethod(gated_pack)
+        jax.block_until_ready(f(a, a))
+        ov.evict("raceacc")               # persist still gated: cancel path
+        gate.set()
+        ov.drain()
+    finally:
+        BitstreamStore.pack_executable = staticmethod(orig_pack)
+    ov.close()
+    assert BitstreamStore(d).keys() == []
+
+
+def test_commit_persist_drops_dead_entries(tmp_path):
+    # even if the scheduler cancel lost the race, _commit_persist refuses
+    # to write a key the cache no longer serves
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)
+    assert ov._commit_persist("ghost:key", b"blob", "kernel") is None
+    assert "ghost:key" not in ov.store
+    ov.close()
+
+
+def test_reconfigure_invalidates_store_entries(tmp_path):
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)
+    f = ov.jit(_mul_fn(2.0, "cfgacc"), name="cfgacc")
+    a = jnp.ones((32,), jnp.float32)
+    jax.block_until_ready(f(a, a))
+    ov.drain()
+    assert len(ov.store.keys()) >= 1
+
+    ov.reconfigure(prefetch=False)
+    assert ov.store.keys() == []          # dropped registries leave no disk
+    ov.close()
+
+
+# ---------------------------------------------------------------------------
+# fleet: members share one store directory
+# ---------------------------------------------------------------------------
+def test_fleet_shares_one_store(tmp_path):
+    d = str(tmp_path / "store")
+    fleet = FleetOverlay(2, rows=3, cols=3, store_path=d)
+    assert fleet.store is not None
+    assert all(m.store is fleet.store for m in fleet.members)
+
+    f = fleet.jit(_mul_fn(2.0, "fleetacc"), name="fleetacc")
+    a = jnp.ones((32,), jnp.float32)
+    out1 = jax.block_until_ready(f(a, a))
+    fleet.drain()
+    fleet.close()
+    assert len(BitstreamStore(d).keys()) >= 1
+
+    fleet2 = FleetOverlay(2, rows=3, cols=3, store_path=d)
+    g = fleet2.jit(_mul_fn(2.0, "fleetacc"), name="fleetacc")
+    out2 = jax.block_until_ready(g(a, a))
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert sum(m.cache.stats.store_hits for m in fleet2.members) >= 1
+    fleet2.close()
+
+
+def test_fleet_store_kwargs_guardrails(tmp_path):
+    with pytest.raises(ValueError):
+        FleetOverlay(2, store=BitstreamStore(str(tmp_path / "a")),
+                     store_path=str(tmp_path / "b"))
+    with pytest.raises(ValueError):
+        FleetOverlay([Overlay(2, 2), Overlay(2, 2)],
+                     store_path=str(tmp_path / "c"))
+
+
+def test_concurrent_members_one_directory(tmp_path):
+    """Two members persisting different accelerators into one directory
+    concurrently: every save lands, the index stays consistent."""
+    d = str(tmp_path / "store")
+    fleet = FleetOverlay(2, rows=3, cols=3, store_path=d)
+    a = jnp.ones((32,), jnp.float32)
+    outs = {}
+
+    def drive(i):
+        f = fleet.members[i].jit(_mul_fn(float(i + 2), f"conc{i}"),
+                                 name=f"conc{i}")
+        outs[i] = np.asarray(jax.block_until_ready(f(a, a)))
+
+    threads = [threading.Thread(target=drive, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fleet.drain()
+    fleet.close()
+    store = BitstreamStore(d)
+    names = {k.split(":")[0] for k in store.keys()}
+    assert names == {"conc0", "conc1"}
+
+
+# ---------------------------------------------------------------------------
+# measurement ledger: EWMA costs + dispatch histograms survive restarts
+# ---------------------------------------------------------------------------
+def test_ledger_round_trip(tmp_path):
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)
+    f = ov.jit(_mul_fn(2.0, "ledacc"), name="ledacc")
+    a = jnp.ones((32,), jnp.float32)
+    for _ in range(4):
+        jax.block_until_ready(f(a, a))
+    ov.drain()
+    ov.close()
+
+    ledger = BitstreamStore(d).load_ledger()
+    assert ledger and ledger["download_costs"]
+    assert any(v > 0 for v in ledger["download_costs"].values())
+
+    ov2 = Overlay(3, 3, store_path=d)
+    assert ov2.fabric.mean_download_cost() > 0.0
+    ov2.close()
+
+
+def test_ledger_merge_keeps_other_rows(tmp_path):
+    store = BitstreamStore(str(tmp_path / "store"))
+    store.save_ledger({"download_costs": {"a": 1.0},
+                       "download_counts": {"a": 2},
+                       "dispatch": {}})
+    store.save_ledger({"download_costs": {"b": 3.0},
+                       "download_counts": {"b": 1},
+                       "dispatch": {}})
+    ledger = store.load_ledger()
+    assert ledger["download_costs"] == {"a": 1.0, "b": 3.0}
+
+
+def test_histogram_state_round_trip():
+    h = Histogram()
+    for us in (10, 100, 1000, 10000):
+        h.record(us)
+    h2 = Histogram.from_state(h.state())
+    assert h2.count == h.count
+    assert h2.percentile(0.5) == h.percentile(0.5)
+    # malformed states degrade to an empty histogram, never raise
+    assert Histogram.from_state({"bogus": 1}).count == 0
+    assert Histogram.from_state(None).count == 0
+
+
+# ---------------------------------------------------------------------------
+# cost-model planner + autotuned thresholds
+# ---------------------------------------------------------------------------
+def test_planner_improves_cyclic_churn():
+    """A rotation of 6 accelerators over a 3-capacity fabric: first-fit +
+    LRU misses every call (the victim is always the next accelerator);
+    the planner's anti-thrash victim rule pins a stable subset resident."""
+    def drive(cost_model):
+        ov = Overlay(3, 3, cost_model_placement=cost_model)
+        a = jnp.ones((64,), jnp.float32)
+        fns = [ov.jit(_mul_fn(float(i + 1), f"rot{i}"), name=f"rot{i}")
+               for i in range(6)]
+        for f in fns:
+            jax.block_until_ready(f(a, a))
+        dl0 = ov.stats.downloads
+        for _ in range(2):
+            for f in fns:
+                jax.block_until_ready(f(a, a))
+        redl = ov.stats.downloads - dl0
+        return 1.0 - redl / 12.0, ov.stats.reclaims
+
+    hit_ff, reclaims_ff = drive(False)
+    hit_cm, reclaims_cm = drive(True)
+    assert hit_cm >= hit_ff
+    assert reclaims_cm < reclaims_ff
+
+
+def test_planner_compacts_under_pressure():
+    # empty fabric: the planner still produces valid placements for several
+    # admissions without reclaiming anything that fits
+    ov = Overlay(3, 3, cost_model_placement=True)
+    a = jnp.ones((32,), jnp.float32)
+    for i in range(3):
+        f = ov.jit(_mul_fn(float(i + 1), f"cp{i}"), name=f"cp{i}")
+        jax.block_until_ready(f(a, a))
+    assert len(ov.fabric) == 3
+    assert ov.stats.reclaims == 0
+
+
+def test_planner_unplaceable_still_raises():
+    """A graph that cannot fit even an EMPTY fabric propagates the
+    structural PlacementError on the planner path, exactly as first-fit
+    does, without evicting innocent residents first."""
+    from repro.core import PlacementError, vmul_reduce_graph
+    # the reduce op needs a LARGE tile; an all-SMALL grid has none
+    ov = Overlay(2, 2, large_fraction=0.0, cost_model_placement=True)
+    with pytest.raises(PlacementError):
+        ov.assemble(vmul_reduce_graph(64))
+
+
+def test_autotune_specialize_after_direction():
+    ov = Overlay(3, 3, autotune_thresholds=True)
+    ov.cache.spec_stats.specializations = 4
+    ov.cache.spec_stats.compile_seconds = 4 * 0.08      # 80ms per spec
+    for _ in range(32):
+        ov.dispatch_hist.record(200.0)                  # 200us dispatches
+    ov._autotune_locked()
+    slow_dispatch = ov.specialize_after
+    assert 8 <= slow_dispatch <= 512
+
+    ov2 = Overlay(3, 3, autotune_thresholds=True)
+    ov2.cache.spec_stats.specializations = 4
+    ov2.cache.spec_stats.compile_seconds = 4 * 0.08
+    for _ in range(32):
+        ov2.dispatch_hist.record(20000.0)               # 20ms dispatches
+    ov2._autotune_locked()
+    # slower dispatches amortize the same spec cost sooner
+    assert ov2.specialize_after <= slow_dispatch
+
+
+def test_autotune_defrag_threshold_adapts():
+    ov = Overlay(3, 3, auto_defragment=True, autotune_thresholds=True)
+    t0 = ov.defrag_threshold
+    ov._defragment_locked = lambda: 0
+    ov.defragment = lambda: 0
+    ov.fabric.fragmentation = lambda: 1.0
+    ov._maybe_defragment()
+    assert ov.defrag_threshold > t0                     # useless pass: raise
+    ov.defragment = lambda: 2
+    ov.fabric.fragmentation = lambda: 1.0
+    t1 = ov.defrag_threshold
+    ov._maybe_defragment()
+    assert ov.defrag_threshold < t1                     # useful pass: lower
+
+
+def test_specialized_tier_persists_and_reloads(tmp_path):
+    """The route-constant tier round-trips through the store: boot B's
+    specialization skips the XLA compile (store hit booked)."""
+    d = str(tmp_path / "store")
+
+    def boot():
+        ov = Overlay(3, 3, store_path=d, specialize_after=2,
+                     async_downloads=True, autotune_thresholds=False)
+        f = ov.jit(_mul_fn(2.0, "specacc"), name="specacc")
+        a = jnp.ones((32,), jnp.float32)
+        for _ in range(8):
+            out = jax.block_until_ready(f(a, a))
+            ov.drain()
+        hits = ov.cache.stats.store_hits
+        specs = ov.cache.spec_stats.specializations
+        ov.close()
+        return np.asarray(out), hits, specs
+
+    out1, _, specs1 = boot()
+    store = BitstreamStore(d)
+    if not any("|spec|" in k for k in store.keys()):
+        pytest.skip("specialization did not trigger in this run")
+    out2, hits2, _ = boot()
+    np.testing.assert_array_equal(out1, out2)
+    assert hits2 >= 1
