@@ -77,6 +77,7 @@ def _live_section() -> int:
     fleet.close()
 
     failures += _store_section()
+    failures += _chaos_section()
 
     for name, violations in sections:
         print(f"  {'FAIL' if violations else 'ok  '}  {name}: "
@@ -142,6 +143,66 @@ def _store_section() -> int:
               f"{ov3.store.stats.load_failures} load failure(s), "
               f"bit-identical={bool((cold == garbled).all())}")
         ov3.close()
+    return failures
+
+
+def _chaos_section() -> int:
+    """Exercise the failure path end-to-end (DESIGN.md §12): a seeded
+    :class:`FaultPlan` fails every download, the overlay must degrade to
+    its residue fallback (zero dropped calls), open the breaker, and keep
+    every invariant — including the new breaker/fallback rules — intact.
+    Prints the failure ledger so retry/breaker drift shows up here."""
+    import warnings
+
+    import jax.numpy as jnp
+
+    from repro.core.faults import FaultPlan
+    from repro.core.overlay import Overlay
+
+    from . import check
+
+    print("== chaos (injected faults) ==")
+    failures = 0
+    x = jnp.ones((8, 8))
+    plan = FaultPlan(seed=11, download_failure_rate=1.0)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(lambda a, b: jnp.sum(a * b), name="audit_chaos")
+    baseline = Overlay(3, 3)
+    g = baseline.jit(lambda a, b: jnp.sum(a * b), name="audit_chaos")
+    want = g(x, x)
+    baseline.close()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        outs = [f(x, x) for _ in range(12)]
+    ledger = ov.failure_ledger()
+    ok = all(bool((o == want).all()) for o in outs)
+    failures += 0 if ok else 1
+    print(f"  {'ok  ' if ok else 'FAIL'}  degraded calls bit-identical: "
+          f"{len(outs)} call(s), {ov.stats.fallback_calls} fallback(s)")
+    ok = (ledger["download_failures"] >= ov.breaker_threshold
+          and ledger["breaker_opens"] >= 1 and ledger["breakers_open"] >= 1)
+    failures += 0 if ok else 1
+    print(f"  {'ok  ' if ok else 'FAIL'}  breaker opened: "
+          f"{ledger['download_failures']} download failure(s), "
+          f"{ledger['download_retries']} retr(ies), "
+          f"{ledger['breaker_opens']} open(s), "
+          f"{ledger['breaker_probes']} probe(s)")
+    violations = check.check_overlay(ov)
+    failures += len(violations)
+    print(f"  {'FAIL' if violations else 'ok  '}  invariants under faults: "
+          f"{len(violations)} violation(s)")
+    for v in violations:
+        print(f"    {v.rule}: {v.message}")
+    replay = FaultPlan(seed=11, download_failure_rate=1.0)
+    for ev in plan.events():
+        replay.fires(ev.channel, ev.key)
+    # replaying the observed (channel, key) sequence must fire faults at
+    # the same ordinals — the determinism contract the chaos soak leans on
+    ok = replay.events() == plan.events() and len(plan.events()) >= 1
+    failures += 0 if ok else 1
+    print(f"  {'ok  ' if ok else 'FAIL'}  fault schedule deterministic: "
+          f"{len(plan.events())} event(s)")
+    ov.close()
     return failures
 
 

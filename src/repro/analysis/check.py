@@ -30,6 +30,14 @@ Compiled entries vs ISA programs (``check_residency``):
 * ``entry/spec-tier``         — tier bookkeeping broken (unknown tier, or
   ``specialized`` without a compiled ``spec_fn`` / with a pending build)
 
+Failure handling (``check_breakers``, part of ``check_overlay``):
+
+* ``entry/breaker-state``     — a breaker in a state other than
+  ``closed``/``open``
+* ``entry/breaker-fallback``  — a breaker-open entry with neither a traced
+  fallback closure nor a previously assembled accelerator: nothing can
+  serve its calls (zero-drop degradation broken)
+
 Bitstream cache side tables (``check_cache``):
 
 * ``cache/route-owner``       — a route program's owner is not a resident,
@@ -47,6 +55,11 @@ Fleet replica records (``check_fleet``):
   pruning should have dropped — dead *sole primaries* are legal (they
   re-download on demand)
 * ``fleet/home-index``        — a graph-home entry naming no member
+* ``fleet/health-size``       — health ledger out of step with the member
+  list, or a member in an unknown health state
+* ``fleet/quarantined-primary`` — a record's primary sits on a quarantined
+  (or dead) member while a live copy exists on a healthy one — demotion
+  should have moved the primary slot
 
 ``describe()`` schema (``check_overlay_describe`` /
 ``check_fleet_describe``): ``describe/*`` — the JSON key structure
@@ -60,8 +73,9 @@ from typing import Any
 
 __all__ = [
     "InvariantError", "Violation", "ensure",
-    "check_fabric", "check_residency", "check_cache", "check_overlay",
-    "check_fleet", "check_overlay_describe", "check_fleet_describe",
+    "check_fabric", "check_residency", "check_cache", "check_breakers",
+    "check_overlay", "check_fleet", "check_overlay_describe",
+    "check_fleet_describe",
 ]
 
 
@@ -222,12 +236,38 @@ def check_cache(overlay: Any) -> list[Violation]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# failure handling: circuit breakers
+# ---------------------------------------------------------------------------
+def check_breakers(overlay: Any) -> list[Violation]:
+    """Zero-drop degradation invariants (DESIGN.md §12): a breaker-open
+    entry is pinned to its fallback, so it must still HAVE one — the
+    traced fallback closure or a previously assembled accelerator."""
+    out: list[Violation] = []
+    for wrapper in list(overlay._wrappers):
+        for key, entry in list(wrapper._entries.items()):
+            if entry.breaker not in ("closed", "open"):
+                out.append(Violation(
+                    "entry/breaker-state",
+                    f"{wrapper.name} entry {key!r}: unknown breaker state "
+                    f"{entry.breaker!r}"))
+                continue
+            if entry.breaker == "open" and entry.closed is None \
+                    and entry.acc is None:
+                out.append(Violation(
+                    "entry/breaker-fallback",
+                    f"{wrapper.name} entry {key!r}: breaker open with no "
+                    f"fallback closure and no assembled accelerator"))
+    return out
+
+
 def check_overlay(overlay: Any) -> list[Violation]:
     """All single-overlay invariants; caller holds ``overlay._lock`` when
     the overlay is shared (the sanitizer hooks do)."""
     return (check_fabric(overlay.fabric)
             + check_residency(overlay)
-            + check_cache(overlay))
+            + check_cache(overlay)
+            + check_breakers(overlay))
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +316,50 @@ def check_fleet(fleet: Any, *, pruned: bool = False) -> list[Violation]:
                 "fleet/home-index",
                 f"graph home for {rid!r} names member {home} of a "
                 f"{n}-member fleet"))
+    out += _check_fleet_health(fleet)
+    return out
+
+
+_HEALTH_STATES = frozenset({"healthy", "probation", "quarantined", "dead"})
+
+
+def _check_fleet_health(fleet: Any) -> list[Violation]:
+    out: list[Violation] = []
+    n = len(fleet.members)
+    health = fleet._health
+    if len(health) != n:
+        out.append(Violation(
+            "fleet/health-size",
+            f"{len(health)} health entries for {n} members"))
+        return out
+    for i, h in enumerate(health):
+        if h.state not in _HEALTH_STATES:
+            out.append(Violation(
+                "fleet/health-size",
+                f"member {i}: unknown health state {h.state!r}"))
+    for wrapper in list(fleet._wrappers):
+        for rec in wrapper._records.values():
+            if not rec.replicas:
+                continue                   # fleet/replica-empty covers it
+            primary = rec.replicas[0]
+            if not 0 <= primary.member_index < n:
+                continue                   # fleet/replica-index covers it
+            if health[primary.member_index].state not in (
+                    "quarantined", "dead"):
+                continue
+            for rep in rec.replicas[1:]:
+                if not 0 <= rep.member_index < n:
+                    continue
+                if health[rep.member_index].state in ("quarantined", "dead"):
+                    continue
+                if fleet._copy_state(rec, rep) == "live":
+                    out.append(Violation(
+                        "fleet/quarantined-primary",
+                        f"{rec.label}: primary on "
+                        f"{health[primary.member_index].state} member "
+                        f"{primary.member_index} while member "
+                        f"{rep.member_index} holds a live copy"))
+                    break
     return out
 
 
@@ -289,8 +373,8 @@ _OVERLAY_DESCRIBE_KEYS = frozenset({
     "traces", "trace_seconds", "downloads", "evictions", "reclaims",
     "defrags", "relocations", "defrag_failures", "async_downloads",
     "cost_aware_reclaim", "prefetches", "prefetch_hits", "fallback_calls",
-    "stale_downloads", "scheduler", "store", "cost_model_placement",
-    "autotune_thresholds", "defrag_threshold",
+    "stale_downloads", "scheduler", "failures", "faults", "store",
+    "cost_model_placement", "autotune_thresholds", "defrag_threshold",
 })
 _FABRIC_DESCRIBE_KEYS = frozenset({
     "tiles", "tiles_used", "tiles_free", "utilization", "fragmentation",
@@ -299,14 +383,14 @@ _FABRIC_DESCRIBE_KEYS = frozenset({
 _RESIDENT_DESCRIBE_KEYS = frozenset({
     "name", "tiles", "downloads", "download_cost", "relocations", "tier",
     "zero_hop", "specializing", "last_used", "route_cost",
-    "dispatch_latency",
+    "dispatch_latency", "dispatch_failures",
 })
 _SPEC_EXTRA_KEYS = frozenset({"specialized_artifacts", "auto",
                               "specialize_after"})
 _FLEET_DESCRIBE_KEYS = frozenset({
-    "size", "window", "replicate_after", "drain_below", "max_replicas",
-    "replicas", "routed_per_member", "scores", "dispatch_p50_us",
-    "dispatch_p99_us", "records",
+    "size", "health", "window", "replicate_after", "drain_below",
+    "max_replicas", "replicas", "routed_per_member", "scores",
+    "dispatch_p50_us", "dispatch_p99_us", "records",
 })
 _FLEET_COPY_KEYS = frozenset({"member", "rid", "primary", "state",
                               "routed", "inflight"})

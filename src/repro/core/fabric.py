@@ -83,6 +83,7 @@ class ResidentAccelerator:
     spec_fn: Any = None            # bound specialized executable (dispatch)
     spec_jit_kwargs: Any = None    # the jit kwargs it was compiled under
     spec_failures: int = 0         # failed spec compiles at these routes
+    dispatch_failures: int = 0     # dispatches that raised (failure ledger)
     live: bool = True
     # dispatch observability (DESIGN.md §9): per-resident end-to-end call
     # latency (us) recorded on the dispatch fast path, and the total hop
@@ -492,6 +493,7 @@ class Fabric:
                           "specializing": res.spec_pending,
                           "last_used": res.last_used,
                           "route_cost": res.route_cost,
+                          "dispatch_failures": res.dispatch_failures,
                           "dispatch_latency": (
                               res.dispatch_hist.summary()
                               if res.dispatch_hist is not None else None)}

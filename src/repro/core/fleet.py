@@ -39,12 +39,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import weakref
 from typing import Any, Callable, Sequence
 
 import jax
 
 from repro.core.fabric import ResidentAccelerator
+from repro.core.faults import FaultPlan
 from repro.core.graph import Graph
 from repro.core.overlay import JitAssembled, Overlay
 from repro.core.placement import PlacementError
@@ -62,6 +64,28 @@ class FleetStats:
     failovers: int = 0           # dispatches served off-primary (primary dead)
     rebalances: int = 0          # watermark evaluation passes
     routed: int = 0              # total dispatches routed fleet-wide
+    quarantines: int = 0         # members pulled from placement (error burst)
+    readmissions: int = 0        # quarantined members returned to service
+    evacuations: int = 0         # sole copies re-homed off a dead member
+    member_deaths: int = 0       # members declared dead (admin or fault plan)
+    dispatch_retries: int = 0    # failed dispatches re-served by another copy
+
+
+@dataclasses.dataclass
+class _MemberHealth:
+    """Per-member health ledger driving quarantine and routing bias.
+
+    ``healthy -> quarantined`` when a rebalance window observes at least
+    ``quarantine_errors`` new member-side failures; ``quarantined ->
+    probation`` after ``quarantine_windows`` consecutive clean windows;
+    ``probation -> healthy`` after one more clean window (readmission) or
+    back to ``quarantined`` on any error.  ``dead`` is terminal and only
+    entered through :meth:`FleetOverlay.kill_member`."""
+
+    state: str = "healthy"       # healthy | probation | quarantined | dead
+    last_seen: int = 0           # member error total at the last window edge
+    window_errors: int = 0       # errors observed in the last window
+    clean_windows: int = 0       # consecutive clean windows while quarantined
 
 
 @dataclasses.dataclass
@@ -241,19 +265,25 @@ class FleetOverlay:
                  replicate_after: int = 32,
                  drain_below: int | None = None,
                  max_replicas: int | None = None,
+                 quarantine_errors: int = 3,
+                 quarantine_windows: int = 2,
+                 faults: "FaultPlan | None" = None,
                  store: "BitstreamStore | None" = None,
                  store_path: "str | None" = None,
                  **overlay_kwargs: Any) -> None:
         if store is not None and store_path is not None:
             raise ValueError("pass store= or store_path=, not both")
         if store is None and store_path is not None:
-            store = BitstreamStore(store_path)
+            store = BitstreamStore(store_path, faults=faults)
         self.store = store
+        self.faults = faults
         if isinstance(members, int):
             if members < 1:
                 raise ValueError("a fleet needs at least one member")
             if store is not None:
                 overlay_kwargs = dict(overlay_kwargs, store=store)
+            if faults is not None:
+                overlay_kwargs = dict(overlay_kwargs, faults=faults)
             members = [Overlay(rows, cols, **overlay_kwargs)
                        for _ in range(members)]
         else:
@@ -272,6 +302,11 @@ class FleetOverlay:
             if len(stores) == 1:
                 self.store = next(m.store for m in members
                                   if m.store is not None)
+            if faults is None:
+                plans = {id(m.faults) for m in members if m.faults is not None}
+                if len(plans) == 1:
+                    self.faults = next(m.faults for m in members
+                                       if m.faults is not None)
         self.members: list[Overlay] = members
         if window < 1:
             raise ValueError("window must be >= 1")
@@ -286,6 +321,12 @@ class FleetOverlay:
                              "(hysteresis)")
         self.max_replicas = (len(members) if max_replicas is None
                              else max(1, min(int(max_replicas), len(members))))
+        if quarantine_errors < 1 or quarantine_windows < 1:
+            raise ValueError("quarantine_errors and quarantine_windows "
+                             "must be >= 1")
+        self.quarantine_errors = int(quarantine_errors)
+        self.quarantine_windows = int(quarantine_windows)
+        self._health = [_MemberHealth() for _ in members]
         # sanitizer rides through from the members (fleet-constructed ones
         # pick it up via **overlay_kwargs / REPRO_SANITIZE): any sanitizing
         # member turns on the fleet-level record checks after rebalance
@@ -335,7 +376,16 @@ class FleetOverlay:
                      on a cold fleet is unchanged; under traffic a member
                      whose dispatches run slow (contended, unspecialized)
                      is deprioritized for NEW placements.
+        ``health`` — failure feedback (DESIGN.md §12): a dead member scores
+                     ``-inf`` (never placed on), a quarantined one takes a
+                     flat -1 (only used when nothing healthier exists), a
+                     probationary one -0.25, and recent window errors are
+                     a graded penalty so an erroring-but-not-yet-
+                     quarantined member already loses placement ties.
         """
+        health = self._health[idx]
+        if health.state == "dead":
+            return float("-inf")
         fab = self.members[idx].fabric
         free = len(fab.free()) / fab.grid.num_tiles
         total = sum(self._window_routed)
@@ -352,10 +402,19 @@ class FleetOverlay:
                         for m in self.members)
             if worst > 0.0:
                 score -= 0.25 * (p50 / worst)
+        if health.state == "quarantined":
+            score -= 1.0
+        elif health.state == "probation":
+            score -= 0.25
+        score -= 0.05 * min(health.window_errors, 10)
         return score
 
     def _best_member(self, exclude: "frozenset[int] | set[int]" = frozenset(),
                      min_free: int = 0) -> int | None:
+        """Highest-scoring candidate.  Dead members score ``-inf`` so they
+        are only ever picked when *every* candidate is dead — placement
+        degrades (a dead member's overlay still serves residue) rather
+        than failing outright."""
         best = None
         for i in range(len(self.members)):
             if i in exclude:
@@ -383,35 +442,62 @@ class FleetOverlay:
                 else "dead")
 
     def _route(self, rec: _FleetRecord) -> _Replica:
-        """Least-loaded live copy: fewest in-flight calls, then fewest
-        lifetime dispatches (equal-load copies round-robin, since routing
-        through one bumps its count past the other).  With no live copy the
-        primary serves — its member wrapper re-downloads or falls back, the
-        single-overlay behavior."""
+        """Least-loaded live copy on a non-dead member — healthy members
+        outrank quarantined/probationary ones, then fewest in-flight calls,
+        then fewest lifetime dispatches (equal-load copies round-robin,
+        since routing through one bumps its count past the other).  With no
+        routable live copy the primary serves — its member wrapper
+        re-downloads or falls back, the single-overlay behavior — unless
+        the primary's member is dead, in which case any copy on a living
+        member is preferred (its wrapper re-downloads there instead)."""
         replicas = rec.replicas
         primary = replicas[0]
+        health = self._health
         if len(replicas) == 1:
             return primary
-        best = None
+        best = best_rank = None
         for rep in replicas:
+            state = health[rep.member_index].state
+            if state == "dead":
+                continue
             if self._copy_state(rec, rep) != "live":
                 continue
-            if best is None or (rep.inflight, rep.routed) < \
-                    (best.inflight, best.routed):
-                best = rep
+            rank = (0 if state == "healthy" else 1,
+                    rep.inflight, rep.routed)
+            if best is None or rank < best_rank:
+                best, best_rank = rep, rank
         if best is None:
+            if health[primary.member_index].state == "dead":
+                for rep in replicas:
+                    if health[rep.member_index].state != "dead":
+                        return rep
             return primary
         if best is not primary and self._copy_state(rec, primary) != "live":
             self.stats.failovers += 1
         return best
 
     def _dispatch(self, rec: _FleetRecord, args: tuple):
+        plan = self.faults
+        if plan is not None and plan.member_deaths:
+            for idx in plan.members_to_kill(self._dispatches):
+                self.kill_member(idx)
         rep = self._route(rec)
         rep.inflight += 1
+        member = self.members[rep.member_index]
+        fails_before = member.stats.dispatch_failures
         try:
             out = rep.wrapper(*args)
         finally:
             rep.inflight -= 1
+        if member.stats.dispatch_failures != fails_before:
+            # the routed copy's dispatch failed (the member already served
+            # this request from its residue, bit-identically): re-serve
+            # through another live copy so the answer comes off fabric and
+            # the suspect member sheds load.  The delta check can trip on a
+            # concurrent failure of an unrelated signature on the same
+            # member — a spurious retry returns the same numbers, so the
+            # race is harmless.
+            out = self._retry_dispatch(rec, rep, args, out)
         rep.routed += 1
         rec.hits += 1
         rec.window_hits += 1
@@ -423,6 +509,28 @@ class FleetOverlay:
             self._rebalance()
         return out
 
+    def _retry_dispatch(self, rec: _FleetRecord, failed: _Replica,
+                        args: tuple, fallback_out):
+        """Dispatch-failure failover (DESIGN.md §12): try one other *live*
+        copy on a non-dead member before settling for ``fallback_out`` (the
+        residue answer the failed member already produced).  Every path
+        returns bit-identical numbers; the retry just keeps the answer
+        coming off fabric and counts the failover."""
+        for rep in rec.replicas:
+            if rep is failed or rep.member_index == failed.member_index:
+                continue
+            if self._health[rep.member_index].state == "dead":
+                continue
+            if self._copy_state(rec, rep) != "live":
+                continue
+            self.stats.dispatch_retries += 1
+            rep.inflight += 1
+            try:
+                return rep.wrapper(*args)
+            finally:
+                rep.inflight -= 1
+        return fallback_out
+
     # -- replication controller ----------------------------------------------
     def _rebalance(self) -> None:
         """One watermark pass over every routing record: prune copies that
@@ -431,9 +539,16 @@ class FleetOverlay:
         the dispatching thread, under the fleet lock."""
         with self._lock:
             self.stats.rebalances += 1
+            self._update_health()
             for wrapper in list(self._wrappers):
                 for rec in list(wrapper._records.values()):
                     self._rebalance_record(wrapper, rec)
+            # replication may have minted live copies since the health pass
+            # demoted — sweep again so no quarantined member keeps a
+            # primary that has a healthy live stand-in
+            for idx, health in enumerate(self._health):
+                if health.state == "quarantined":
+                    self._demote_member(idx)
             self._window_routed = [0] * len(self.members)
             if self.sanitize:
                 from repro.analysis import check as _check
@@ -490,6 +605,8 @@ class FleetOverlay:
         if res is None:
             return                       # primary still downloading: next tick
         hosted = {rep.member_index for rep in rec.replicas}
+        hosted |= {i for i, h in enumerate(self._health)
+                   if h.state in ("dead", "quarantined")}
         idx = self._best_member(exclude=hosted, min_free=len(res.tiles))
         if idx is None:
             return                       # no member has headroom — stay put
@@ -519,6 +636,158 @@ class FleetOverlay:
         rec.replicas = tuple(rep for rep in rec.replicas
                              if rep is not victim)
         self.stats.replica_teardowns += 1
+
+    # -- member health: quarantine, death, evacuation (DESIGN.md §12) ---------
+    def _member_errors(self, idx: int) -> int:
+        """The member-side failure total the health machine samples: every
+        failed dispatch plus every failed download on that overlay."""
+        stats = self.members[idx].stats
+        return stats.dispatch_failures + stats.download_failures
+
+    def _update_health(self) -> None:
+        """One health pass per rebalance window, under the fleet lock:
+        sample each living member's error delta and step its state machine
+        (see :class:`_MemberHealth`).  Quarantined members also get their
+        primaries demoted each pass — copies that went live elsewhere since
+        the quarantine take over routing."""
+        for idx, health in enumerate(self._health):
+            if health.state == "dead":
+                continue
+            total = self._member_errors(idx)
+            delta = total - health.last_seen
+            health.last_seen = total
+            health.window_errors = delta
+            if health.state == "healthy":
+                if delta >= self.quarantine_errors:
+                    self._quarantine(idx)
+            elif health.state == "quarantined":
+                if delta == 0:
+                    health.clean_windows += 1
+                    if health.clean_windows >= self.quarantine_windows:
+                        health.state = "probation"
+                        health.clean_windows = 0
+                else:
+                    health.clean_windows = 0
+            elif health.state == "probation":
+                if delta == 0:
+                    health.state = "healthy"
+                    self.stats.readmissions += 1
+                else:
+                    self._quarantine(idx)
+            if health.state == "quarantined":
+                self._demote_member(idx)
+
+    def _quarantine(self, idx: int) -> None:
+        health = self._health[idx]
+        health.state = "quarantined"
+        health.clean_windows = 0
+        self.stats.quarantines += 1
+        self._demote_member(idx)
+
+    def _demote_member(self, idx: int) -> None:
+        """Move the primary slot off member ``idx`` wherever a live copy
+        exists elsewhere.  Sole copies stay (a quarantined member keeps
+        serving what only it holds — quarantine gates *placement* and
+        routing preference, never availability)."""
+        for wrapper in list(self._wrappers):
+            for rec in list(wrapper._records.values()):
+                reps = rec.replicas
+                if not reps or reps[0].member_index != idx:
+                    continue
+                live = [rep for rep in reps[1:]
+                        if rep.member_index != idx
+                        and self._health[rep.member_index].state != "dead"
+                        and self._copy_state(rec, rep) == "live"]
+                if not live:
+                    continue
+                new_primary = live[0]
+                rec.replicas = (new_primary,) + tuple(
+                    rep for rep in reps if rep is not new_primary)
+
+    def kill_member(self, idx: int) -> None:
+        """Declare member ``idx`` dead — by an operator, a test, or the
+        fault plan's ``member_deaths`` schedule.  The member's fabric is
+        flushed (its residents are gone, as after a real host loss), every
+        sole copy it held is evacuated — re-homed via a fresh download on
+        the best surviving member — and the health machine stops placing
+        or routing there.  Terminal: dead members are never re-admitted."""
+        if not 0 <= idx < len(self.members):
+            raise ValueError(f"no member {idx} in a fleet of "
+                             f"{len(self.members)}")
+        with self._lock:
+            health = self._health[idx]
+            if health.state == "dead":
+                return
+            health.state = "dead"
+            self.stats.member_deaths += 1
+            self._evacuate(idx)
+            self.members[idx].reconfigure(prefetch=False)
+            self._graph_homes = {rid: home for rid, home
+                                 in self._graph_homes.items() if home != idx}
+
+    def _evacuate(self, idx: int) -> None:
+        """Re-home every record with a copy on dying member ``idx``: a live
+        survivor elsewhere is promoted to primary; a *sole* copy is
+        re-downloaded onto the best surviving member (counted in
+        ``stats.evacuations``).  Runs before the member flush so copy
+        states still reflect the pre-death fabric."""
+        for wrapper in list(self._wrappers):
+            for rec in list(wrapper._records.values()):
+                if not any(rep.member_index == idx for rep in rec.replicas):
+                    continue
+                off = [rep for rep in rec.replicas if rep.member_index != idx]
+                live = [rep for rep in off
+                        if self._health[rep.member_index].state != "dead"
+                        and self._copy_state(rec, rep) == "live"]
+                if live:
+                    rec.replicas = tuple(
+                        live + [rep for rep in off if rep not in live])
+                    continue
+                new_idx = self._best_member(exclude={idx})
+                if new_idx is None or \
+                        self._health[new_idx].state == "dead":
+                    if off:
+                        rec.replicas = tuple(off)
+                    continue             # nowhere living to go: re-place later
+                member_wrapper = wrapper._member_wrapper(new_idx)
+                try:
+                    member_wrapper.prefetch(*rec.args_spec)
+                except PlacementError:
+                    if off:
+                        rec.replicas = tuple(off)
+                    continue
+                rec.replicas = ((_Replica(new_idx, member_wrapper),)
+                                + tuple(off))
+                self.stats.evacuations += 1
+
+    def health(self) -> list[dict[str, Any]]:
+        """Per-member health snapshot (JSON-friendly)."""
+        with self._lock:
+            return [{"member": i, "state": h.state,
+                     "errors": h.last_seen,
+                     "window_errors": h.window_errors}
+                    for i, h in enumerate(self._health)]
+
+    def failure_ledger(self) -> dict[str, Any]:
+        """Fleet-wide failure accounting: the member ledgers summed, plus
+        the fleet layer's own health events.  The serving engines surface
+        this through ``metrics()``; the analysis report prints it."""
+        totals: dict[str, int] = {}
+        for member in self.members:
+            for key, value in member.failure_ledger().items():
+                totals[key] = totals.get(key, 0) + value
+        totals.update(
+            quarantines=self.stats.quarantines,
+            readmissions=self.stats.readmissions,
+            evacuations=self.stats.evacuations,
+            member_deaths=self.stats.member_deaths,
+            fleet_dispatch_retries=self.stats.dispatch_retries,
+            quarantined_members=[i for i, h in enumerate(self._health)
+                                 if h.state == "quarantined"],
+            dead_members=[i for i, h in enumerate(self._health)
+                          if h.state == "dead"],
+        )
+        return totals
 
     # -- cross-fabric reclaim preference --------------------------------------
     def _replica_preference(self, idx: int
@@ -636,10 +905,19 @@ class FleetOverlay:
 
     def drain(self, timeout: float | None = None) -> bool:
         """Barrier over every member's download scheduler (replica
-        downloads included — they are ordinary low-lane jobs)."""
+        downloads included — they are ordinary low-lane jobs).
+
+        ``timeout`` bounds the WHOLE fleet drain: one shared monotonic
+        deadline, each member granted only the time remaining — not a full
+        ``timeout`` serially per member (a wedged 8-member fleet answers
+        after ``timeout``, not ``8 * timeout``)."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
         ok = True
         for member in self.members:
-            ok = member.drain(timeout) and ok
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            ok = member.drain(remaining) and ok
         return ok
 
     def close(self) -> None:
@@ -684,6 +962,10 @@ class FleetOverlay:
                           if self.store is not None else None),
                 "fleet": {
                     "size": len(self.members),
+                    "health": [{"member": i, "state": h.state,
+                                "errors": h.last_seen,
+                                "window_errors": h.window_errors}
+                               for i, h in enumerate(self._health)],
                     "window": self.window,
                     "replicate_after": self.replicate_after,
                     "drain_below": self.drain_below,

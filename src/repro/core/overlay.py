@@ -67,6 +67,7 @@ from repro.core import interpreter as interp
 from repro.core import trace as trace_lib
 from repro.core.cache import BitstreamCache
 from repro.core.fabric import Fabric, FabricError, ResidentAccelerator
+from repro.core.faults import FaultError, FaultPlan
 from repro.core.graph import Graph
 from repro.core.isa import Program, compile_graph
 from repro.core.placement import (Coord, Placement, PlacementError,
@@ -100,6 +101,14 @@ class OverlayStats:
     prefetch_hits: int = 0      # demand requests satisfied by a prior prefetch
     fallback_calls: int = 0     # calls served by a fallback mid-download
     stale_downloads: int = 0    # background results dropped (generation flushed)
+    download_failures: int = 0  # download/compile attempts that raised
+    download_retries: int = 0   # re-attempts after a backoff window elapsed
+    breaker_opens: int = 0      # entries pinned to fallback (failure cap hit)
+    breaker_probes: int = 0     # probe downloads while a breaker was open
+    breaker_closes: int = 0     # breakers re-closed by a successful probe
+    dispatch_failures: int = 0  # resident dispatches that raised
+    dispatch_fallbacks: int = 0 # failed dispatches served by the residue
+    resident_losses: int = 0    # residents lost at dispatch time (injected)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +141,17 @@ class _JitEntry:
     jit_kwargs: dict[str, Any] | None = None  # last demand's kwargs (donation)
     download_failures: int = 0                # consecutive failed compiles
     record: _DispatchRecord | None = None     # lock-light hot-path snapshot
+    # deterministic retry/backoff clock (DESIGN.md §12): `calls` ticks once
+    # per slow-path call and every retry decision keys on it — never on
+    # wall-clock — so a failure schedule replays exactly.  The breaker pins
+    # a repeatedly-failing entry to its fallback; while "open" only probe
+    # downloads (every `probe_interval` calls, doubling per failed probe)
+    # are attempted, and one success re-closes it.
+    calls: int = 0                            # slow-path call counter
+    retry_at: int = 0                         # earliest call allowed to retry
+    breaker: str = "closed"                   # "closed" | "open"
+    breaker_opened_at: int = 0                # call count at open/last probe
+    probe_interval: int = 0                   # calls between probes when open
 
 
 @dataclasses.dataclass
@@ -274,27 +294,83 @@ class JitAssembled:
             entry.assemble_seconds = (handle.seconds if handle is not None
                                       and handle.seconds > 0.0
                                       else time.perf_counter() - t0)
-            entry.download_failures = 0
+            self._note_download_success(entry)
             self.overlay._publish_record(entry)
         elif handle is not None and handle.error is not None:
-            entry.download_failures += 1
+            self._note_download_failure(entry, handle.error)
+        entry.pending = None
+
+    # -- retry / circuit breaker (DESIGN.md §12) ------------------------------
+    def _download_allowed(self, entry: _JitEntry) -> bool:
+        """Whether an attempt may start NOW, per the entry's deterministic
+        retry clock.  Closed breaker: allowed once the exponential-backoff
+        window (in slow-path calls, not seconds) has elapsed.  Open
+        breaker: only a probe every ``probe_interval`` calls."""
+        ov = self.overlay
+        if entry.breaker == "open":
+            if entry.calls - entry.breaker_opened_at < entry.probe_interval:
+                return False
+            entry.breaker_opened_at = entry.calls
+            ov.stats.breaker_probes += 1
+            return True
+        if entry.download_failures and entry.calls < entry.retry_at:
+            return False
+        if entry.download_failures:
+            ov.stats.download_retries += 1
+        return True
+
+    def _note_download_failure(self, entry: _JitEntry,
+                               error: BaseException | Exception) -> None:
+        """Book one failed download attempt: schedule the deterministic
+        backoff, open the breaker at the threshold, double the probe window
+        on a failed probe.  The fallback keeps serving throughout."""
+        ov = self.overlay
+        entry.download_failures += 1
+        ov.stats.download_failures += 1
+        if entry.breaker == "open":
+            # failed probe: re-arm with a doubled (capped) window
+            entry.probe_interval = min(256, max(1, entry.probe_interval * 2))
+            entry.breaker_opened_at = entry.calls
+            return
+        if entry.download_failures >= ov.breaker_threshold:
+            entry.breaker = "open"
+            entry.breaker_opened_at = entry.calls
+            entry.probe_interval = ov.breaker_probe_after
+            ov.stats.breaker_opens += 1
+            warnings.warn(
+                f"PR downloads for {self.name!r} failed "
+                f"{entry.download_failures} times ({error!r}); breaker "
+                f"open — pinned to the fallback, probing every "
+                f"{entry.probe_interval} calls.",
+                RuntimeWarning, stacklevel=2)
+        else:
+            entry.retry_at = entry.calls + ov.retry_backoff * (
+                2 ** (entry.download_failures - 1))
             if entry.download_failures == 1:
                 warnings.warn(
                     f"background PR download for {self.name!r} failed "
-                    f"({handle.error!r}); serving from the fallback. "
-                    f"Giving up after {_MAX_DOWNLOAD_FAILURES} attempts.",
+                    f"({error!r}); serving from the fallback and retrying "
+                    f"with backoff.",
                     RuntimeWarning, stacklevel=2)
-        entry.pending = None
+
+    def _note_download_success(self, entry: _JitEntry) -> None:
+        ov = self.overlay
+        if entry.breaker == "open":
+            entry.breaker = "closed"
+            ov.stats.breaker_closes += 1
+        entry.download_failures = 0
+        entry.retry_at = 0
 
     def _submit(self, entry: _JitEntry, *, kind: str = "demand",
                 reclaim: bool = True, low: bool = False
                 ) -> DownloadHandle | None:
-        """Request this entry's download; bounded retry on compile failure
-        (the fallback keeps serving either way).  After ``overlay.close()``
-        no new downloads start but calls keep being served."""
-        if entry.download_failures >= _MAX_DOWNLOAD_FAILURES:
-            return None
+        """Request this entry's download; deterministic backoff + circuit
+        breaker on compile failure (the fallback keeps serving either way).
+        After ``overlay.close()`` no new downloads start but calls keep
+        being served."""
         if self.overlay.scheduler.closed:
+            return None
+        if not self._download_allowed(entry):
             return None
         t0 = time.perf_counter()
         # clear first: an immediate completion (cached bitstream) delivers
@@ -326,15 +402,32 @@ class JitAssembled:
         # from the fabric since (LRU reclaim / reconfigure): re-place and
         # re-download
         if aot or not self.overlay.async_downloads:
+            if not self._download_allowed(entry):
+                return entry               # backing off / breaker open
             t0 = time.perf_counter()
             entry.jit_kwargs = self._jit_kwargs(args)
-            entry.acc = self.overlay.assemble(entry.lowered.graph,
-                                              fixed=self.fixed,
-                                              jit_kwargs=entry.jit_kwargs,
-                                              aot=aot,
-                                              tile_budget=self.tile_budget)
+            try:
+                entry.acc = self.overlay.assemble(entry.lowered.graph,
+                                                  fixed=self.fixed,
+                                                  jit_kwargs=entry.jit_kwargs,
+                                                  aot=aot,
+                                                  tile_budget=self.tile_budget)
+            except (PlacementError, FabricError):
+                raise                      # structural — must propagate
+            except Exception as exc:
+                from repro.analysis.check import InvariantError
+                if isinstance(exc, InvariantError):
+                    raise                  # sanitizer verdict: a bug, not
+                                           # an outage — never degrade it
+                # compile/download failure on the sync path (injected or
+                # real): degrade to the eager residue and retry later on
+                # the deterministic backoff clock
+                self._note_download_failure(entry, exc)
+                entry.pending = None
+                return entry
             entry.assemble_seconds = time.perf_counter() - t0
             entry.pending = None
+            self._note_download_success(entry)
             self.overlay._publish_record(entry)
             return entry
         # asynchronous pipeline: serve from the fallback.  The download
@@ -346,6 +439,10 @@ class JitAssembled:
     def _ensure_download(self, entry: _JitEntry, args: tuple) -> None:
         """Request the background download once per outage; the scheduler
         coalesces repeats by residency key."""
+        if not self.overlay.async_downloads:
+            # synchronous overlays retry eagerly through _entry on a later
+            # call — they must never start background work
+            return
         if entry.pending is not None and not entry.pending.done():
             # demanded while the download is in flight: keep the resident's
             # recency honest (handle.key IS the rid) — a hot accelerator
@@ -402,7 +499,8 @@ class JitAssembled:
         if not ov.async_downloads:
             self._entry(args, aot=True, _presplit=presplit)
             ov.stats.prefetches += 1
-            ov._prefetched.add(entry.acc.resident_id)
+            if entry.acc is not None:     # eager assemble may have degraded
+                ov._prefetched.add(entry.acc.resident_id)
             return None
         if entry.pending is not None and not entry.pending.done():
             return entry.pending                     # already on its way
@@ -481,16 +579,23 @@ class JitAssembled:
                 if res.live and res.generation == rec.generation and \
                         (self.tile_budget is None
                          or res.tile_budget == self.tile_budget):
-                    return self._dispatch_fast(entry, rec, res, presplit)
+                    return self._dispatch_fast(args, entry, rec, res,
+                                               presplit)
         return self._call_slow(args, presplit)
 
-    def _dispatch_fast(self, entry: _JitEntry, rec: _DispatchRecord,
+    def _dispatch_fast(self, args, entry: _JitEntry, rec: _DispatchRecord,
                        res: ResidentAccelerator, presplit):
         """Resident-hit dispatch without the overlay lock: recency bump,
         tier bookkeeping, call.  Also the specialization trigger point —
         a contiguous (zero-hop) or dispatch-stable generic resident queues
         its route-constant compile on the scheduler's low lane."""
         ov = self.overlay
+        plan = ov.faults
+        if plan is not None and plan.fires("resident_loss", res.rid):
+            # injected PR-region loss: the resident silently vanishes and
+            # this call degrades to the slow path (fallback + re-download)
+            ov._lose_resident(res.rid)
+            return self._call_slow(args, presplit)
         ov.fabric.touch_resident(res)
         if ov._prefetched:
             ov._note_demand(res.rid)
@@ -506,7 +611,15 @@ class JitAssembled:
                 ov._request_specialize(entry, res)
         flat = jax.tree.leaves(presplit[0])
         t0 = time.perf_counter()
-        out = rec.fn(*flat)
+        try:
+            if plan is not None and plan.fires("dispatch", res.rid):
+                raise FaultError(
+                    f"injected dispatch failure on {res.rid!r}")
+            out = rec.fn(*flat)
+        except (PlacementError, FabricError):
+            raise
+        except Exception as exc:
+            return self._dispatch_failed(entry, res, exc, args, presplit)
         us = (time.perf_counter() - t0) * 1e6
         res.dispatch_hist.record(us)
         ov.dispatch_hist.record(us)
@@ -514,8 +627,30 @@ class JitAssembled:
         leaves = list(out) if n_out > 1 else [out]
         return jax.tree_util.tree_unflatten(entry.lowered.out_tree, leaves)
 
+    def _dispatch_failed(self, entry: _JitEntry, res: ResidentAccelerator,
+                         exc: BaseException, args, presplit):
+        """A resident dispatch raised: evict the suspect resident (its tile
+        state is unknown), serve THIS request from the eager residue, and
+        re-request the download — an admitted call never surfaces the
+        failure, it shows up as latency and failure-ledger counters."""
+        ov = self.overlay
+        ov.stats.dispatch_failures += 1
+        logger.warning("dispatch on %r (%s) failed: %r — serving the "
+                       "residue fallback", res.rid, self.name, exc)
+        with ov._lock:
+            res.dispatch_failures += 1
+            if ov.fabric.get(res.rid) is res:
+                ov._evict_resident(res.rid)
+            entry.record = None
+        ov.stats.dispatch_fallbacks += 1
+        ov.stats.fallback_calls += 1
+        out = entry.closed(*presplit[0])
+        self._ensure_download(entry, args)
+        return out
+
     def _call_slow(self, args, presplit):
         entry = self._entry(args, _presplit=presplit)
+        entry.calls += 1               # the deterministic retry clock
         ov = self.overlay
         acc = entry.acc
         if acc is None:
@@ -548,7 +683,16 @@ class JitAssembled:
                 ov.cache.spec_stats.specialized_hits += 1
             flat = jax.tree.leaves(presplit[0])
             t0 = time.perf_counter()
-            out = fn(*flat)
+            try:
+                out = fn(*flat)
+            except (PlacementError, FabricError):
+                raise
+            except Exception as exc:
+                res = rec.res if rec is not None \
+                    else ov.fabric.get(acc.resident_id)
+                if res is None:
+                    raise
+                return self._dispatch_failed(entry, res, exc, args, presplit)
             us = (time.perf_counter() - t0) * 1e6
             if rec is not None and rec.res.dispatch_hist is not None:
                 rec.res.dispatch_hist.record(us)
@@ -636,7 +780,13 @@ class Overlay:
                  store: "BitstreamStore | None" = None,
                  store_path: "str | None" = None,
                  cost_model_placement: bool | None = None,
-                 autotune_thresholds: bool | None = None) -> None:
+                 autotune_thresholds: bool | None = None,
+                 faults: "FaultPlan | None" = None,
+                 breaker_threshold: int = _MAX_DOWNLOAD_FAILURES,
+                 retry_backoff: int = 1,
+                 breaker_probe_after: int = 8,
+                 download_deadline: float | None = None,
+                 drain_timeout: float = 30.0) -> None:
         self.grid = TileGrid(rows, cols, large_fraction)
         self.policy = policy
         self.mesh = mesh
@@ -654,12 +804,25 @@ class Overlay:
         if specialize_after < 1:
             raise ValueError("specialize_after must be >= 1")
         self.specialize_after = int(specialize_after)
-        self.scheduler = DownloadScheduler(workers=download_workers)
+        # failure model (DESIGN.md §12): deterministic fault injection,
+        # retry/backoff + per-entry circuit breaker, download deadlines
+        self.faults = faults
+        if breaker_threshold < 1 or retry_backoff < 1 \
+                or breaker_probe_after < 1:
+            raise ValueError("breaker_threshold, retry_backoff and "
+                             "breaker_probe_after must be >= 1")
+        self.breaker_threshold = int(breaker_threshold)
+        self.retry_backoff = int(retry_backoff)
+        self.breaker_probe_after = int(breaker_probe_after)
+        self.download_deadline = download_deadline
+        self.drain_timeout = float(drain_timeout)
+        self.scheduler = DownloadScheduler(workers=download_workers,
+                                           drain_timeout=drain_timeout)
         # persistent bitstream store + cost-model planner (DESIGN.md §11)
         if store is not None and store_path is not None:
             raise ValueError("pass store= or store_path=, not both")
         if store is None and store_path is not None:
-            store = BitstreamStore(store_path)
+            store = BitstreamStore(store_path, faults=faults)
         self.store = store
         self.cost_model_placement = ((store is not None)
                                      if cost_model_placement is None
@@ -722,6 +885,51 @@ class Overlay:
         if rid in self._prefetched:
             self._prefetched.discard(rid)
             self.stats.prefetch_hits += 1
+
+    # -- failure model (DESIGN.md §12) ----------------------------------------
+    def _inject_download_fault(self, key: str) -> None:
+        """Chaos choke point for the bitstream compile (sync and async
+        paths): optionally sleep first (slow download), optionally raise
+        :class:`FaultError` (failed download).  No-op without a plan."""
+        plan = self.faults
+        if plan is None:
+            return
+        if plan.slow_seconds > 0.0 and plan.fires("slow_download", key):
+            time.sleep(plan.slow_seconds)
+        if plan.fires("download", key):
+            raise FaultError(f"injected download failure for {key!r}")
+
+    def _lose_resident(self, rid: str) -> None:
+        """Injected dispatch-time resident loss (the chaos analogue of an
+        SEU / power glitch wiping a PR region): the resident leaves the
+        fabric through the one true evict path; the caller degrades to the
+        slow path and re-downloads."""
+        with self._lock:
+            if self.fabric.get(rid) is not None:
+                self.stats.resident_losses += 1
+                self._evict_resident(rid)
+
+    def failure_ledger(self) -> dict[str, Any]:
+        """One-stop failure accounting: retries, breaker state, dispatch
+        fallbacks, watchdog timeouts.  Serving layers surface this through
+        ``metrics()``; the analysis report prints it."""
+        open_breakers = 0
+        for wrapper in list(self._wrappers):
+            for entry in list(wrapper._entries.values()):
+                if entry.breaker == "open":
+                    open_breakers += 1
+        return {
+            "download_failures": self.stats.download_failures,
+            "download_retries": self.stats.download_retries,
+            "breaker_opens": self.stats.breaker_opens,
+            "breaker_probes": self.stats.breaker_probes,
+            "breaker_closes": self.stats.breaker_closes,
+            "breakers_open": open_breakers,
+            "dispatch_failures": self.stats.dispatch_failures,
+            "dispatch_fallbacks": self.stats.dispatch_fallbacks,
+            "resident_losses": self.stats.resident_losses,
+            "timed_out_downloads": self.scheduler.stats.timed_out,
+        }
 
     # -- lock-light dispatch records ------------------------------------------
     def _publish_record(self, entry: _JitEntry) -> None:
@@ -1624,6 +1832,7 @@ class Overlay:
         # miss: build OUTSIDE the lock — an AOT compile can run for seconds
         # and must not stall concurrent requests or background commits.
         # What compiles is the placement-invariant KERNEL (routes as arg 0).
+        self._inject_download_fault(key)
         t0 = time.perf_counter()
         kernel_kwargs = cache_lib.kernel_jit_kwargs(jit_kwargs)
         if self.mesh is not None:
@@ -1727,12 +1936,14 @@ class Overlay:
             rid,
             lambda: self._compile_bitstream(pending),
             lambda exe, dt: self._commit_download(pending, exe, dt),
-            on_done=on_done, kind=kind, low=low)
+            on_done=on_done, kind=kind, low=low,
+            deadline=self.download_deadline)
 
     def _compile_bitstream(self, pending: _PendingDownload):
         """The expensive half of a download — eager XLA compile of the
         placement-invariant kernel (routes as argument 0).  Runs on a
         scheduler worker, no locks held."""
+        self._inject_download_fault(pending.key)
         base = pending.base
         routes_aval = jax.ShapeDtypeStruct(base.routes.shape,
                                            base.routes.dtype)
@@ -1778,21 +1989,30 @@ class Overlay:
         completion swaps have been delivered)."""
         return self.scheduler.drain(timeout)
 
-    def close(self) -> None:
+    def close(self, *, drain_timeout: float | None = None) -> None:
         """End-of-life for the download pipeline: cancel outstanding
         downloads and retire the scheduler's worker threads.  The overlay
         itself keeps serving — synchronous paths are unaffected, and async
         jit misses permanently serve their fallback (no new downloads
         start).  Optional: idle workers also expire on their own.
 
+        ``drain_timeout`` overrides the constructor's ``drain_timeout``
+        for this close; a timed-out drain warns with the undrained job
+        count instead of returning silently.
+
         With a store attached, queued persists drain FIRST (shutdown
         flushes the queue, which would cancel them) and the measurement
         ledger gets a final save — the whole point of closing cleanly is
         the next boot finding everything on disk."""
+        limit = self.drain_timeout if drain_timeout is None else drain_timeout
         if self.store is not None and not self.scheduler.closed:
-            self.scheduler.drain(timeout=30.0)
+            if not self.scheduler.drain(timeout=limit):
+                logger.warning(
+                    "overlay close: %d background job(s) still undrained "
+                    "after %.1fs; persisting the ledger anyway",
+                    self.scheduler.outstanding(), limit)
             self.store.save_ledger(self.fabric.export_ledger())
-        self.scheduler.shutdown(wait=True)
+        self.scheduler.shutdown(wait=True, timeout=limit)
 
     # -- explicit PR-region management ----------------------------------------
     def _evict_resident(self, rid: str, *, drop_store: bool = False) -> int:
@@ -2062,6 +2282,9 @@ class Overlay:
             "fallback_calls": self.stats.fallback_calls,
             "stale_downloads": self.stats.stale_downloads,
             "scheduler": self.scheduler.describe(),
+            "failures": self.failure_ledger(),
+            "faults": (self.faults.describe()
+                       if self.faults is not None else None),
             "store": (self.store.describe()
                       if self.store is not None else None),
             "cost_model_placement": self.cost_model_placement,

@@ -41,6 +41,7 @@ from __future__ import annotations
 import atexit
 import collections
 import dataclasses
+import logging
 import os
 import threading
 import time
@@ -48,6 +49,8 @@ import weakref
 from typing import Any, Callable
 
 __all__ = ["DownloadHandle", "DownloadScheduler", "SchedulerStats"]
+
+logger = logging.getLogger(__name__)
 
 # every live scheduler, so interpreter exit can wait out in-flight compiles:
 # CPython kills daemon threads abruptly, and a worker killed inside an XLA
@@ -80,6 +83,7 @@ class SchedulerStats:
     priority_jobs: int = 0    # jobs that jumped the queue (relocation commits)
     low_jobs: int = 0         # background-lane jobs (route specialization)
     persist_jobs: int = 0     # store-persist jobs (always low lane)
+    timed_out: int = 0        # jobs failed by the watchdog (deadline passed)
     download_seconds: float = 0.0   # total background work time
 
 
@@ -103,7 +107,8 @@ class DownloadHandle:
 
 
 class _Job:
-    __slots__ = ("key", "work", "commit", "handles", "state", "stale")
+    __slots__ = ("key", "work", "commit", "handles", "state", "stale",
+                 "expires_at", "timed_out")
 
     def __init__(self, key: str, work: Callable[[], Any],
                  commit: Callable[[Any, float], Any]) -> None:
@@ -115,25 +120,30 @@ class _Job:
                   "Callable[[Any, DownloadHandle], None] | None"]] = []
         self.state = _QUEUED
         self.stale = False     # cancel()/flush() hit it while running
+        self.expires_at: float | None = None   # monotonic watchdog deadline
+        self.timed_out = False  # watchdog already failed + delivered it
 
 
 class DownloadScheduler:
     """Background pipeline for PR-bitstream downloads (place+compile)."""
 
     def __init__(self, workers: int = 1, name: str = "pr-download",
-                 idle_timeout: float = 30.0) -> None:
+                 idle_timeout: float = 30.0,
+                 drain_timeout: float = 30.0) -> None:
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.workers = workers
         self.name = name
         self.idle_timeout = idle_timeout      # idle workers expire (no leak
-        self.stats = SchedulerStats()         # from abandoned overlays)
+        self.drain_timeout = drain_timeout    # from abandoned overlays)
+        self.stats = SchedulerStats()
         self._cond = threading.Condition()
         self._queue: collections.deque[_Job] = collections.deque()
         self._low: collections.deque[_Job] = collections.deque()   # spec lane
         self._jobs: dict[str, _Job] = {}      # queued or running, by key
         self._finishing = 0                   # jobs delivering observer calls
         self._threads: list[threading.Thread] = []
+        self._watchdog: threading.Thread | None = None
         self._shutdown = False
         _LIVE_SCHEDULERS.add(self)
 
@@ -142,7 +152,8 @@ class DownloadScheduler:
                commit: Callable[[Any, float], Any], *,
                on_done: "Callable[[Any, DownloadHandle], None] | None" = None,
                kind: str = "demand", priority: bool = False,
-               low: bool = False) -> DownloadHandle:
+               low: bool = False,
+               deadline: float | None = None) -> DownloadHandle:
         """Enqueue ``work`` (worker thread) followed by ``commit`` (same
         thread; must validate + publish).  Same-key submits while the first
         is in flight coalesce onto it.  ``on_done`` observers are invoked as
@@ -155,6 +166,10 @@ class DownloadScheduler:
         ``low=True`` routes the job to the background-optimization lane:
         workers only pick it up while the main queue is EMPTY, so a pending
         download/relocation is never delayed by it (route specialization).
+
+        ``deadline`` (seconds from now) arms the watchdog: a job still
+        outstanding past its deadline is failed with :class:`TimeoutError`
+        delivered to its observers instead of wedging ``drain()``.
 
         Submitting against a shut-down scheduler returns an already-done
         CANCELLED handle (observers still fire, with ``result=None``) —
@@ -182,9 +197,17 @@ class DownloadScheduler:
                     job.handles.append((handle, on_done))
                     handle.status = job.state
                     self.stats.coalesced += 1
+                    if deadline is not None:
+                        expires = time.monotonic() + deadline
+                        if job.expires_at is None or expires < job.expires_at:
+                            job.expires_at = expires
+                        self._ensure_watchdog()
                     return handle
                 job = _Job(key, work, commit)
                 job.handles.append((handle, on_done))
+                if deadline is not None:
+                    job.expires_at = time.monotonic() + deadline
+                    self._ensure_watchdog()
                 self._jobs[key] = job
                 if priority:
                     self._queue.appendleft(job)
@@ -213,6 +236,60 @@ class DownloadScheduler:
                                  daemon=True)
             self._threads.append(t)
             t.start()
+
+    def _ensure_watchdog(self) -> None:
+        # called under the lock; lazily spawned only once a deadlined job
+        # exists, so deadline-free schedulers never pay a watchdog thread
+        if self._watchdog is None or not self._watchdog.is_alive():
+            self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                              name=f"{self.name}-watchdog",
+                                              daemon=True)
+            self._watchdog.start()
+
+    def _watchdog_loop(self) -> None:
+        """Fail jobs (queued OR running) whose deadline has passed: the
+        handle gets a :class:`TimeoutError`, the job stops counting as
+        outstanding (so ``drain()`` unwedges), and a running job forfeits
+        its commit via the stale flag."""
+        while True:
+            expired: list[_Job] = []
+            with self._cond:
+                now = time.monotonic()
+                next_at: float | None = None
+                for job in list(self._jobs.values()):
+                    if job.expires_at is None:
+                        continue
+                    if job.expires_at <= now:
+                        job.stale = True        # a late work() may not commit
+                        job.timed_out = True
+                        if job.state == _QUEUED:
+                            for lane in (self._queue, self._low):
+                                try:
+                                    lane.remove(job)
+                                    break
+                                except ValueError:
+                                    pass
+                        job.state = _DONE
+                        del self._jobs[job.key]
+                        self.stats.timed_out += 1
+                        self._finishing += 1
+                        expired.append(job)
+                    elif next_at is None or job.expires_at < next_at:
+                        next_at = job.expires_at
+                if not expired:
+                    if next_at is None:
+                        # nothing deadlined left: retire (submit respawns)
+                        self._watchdog = None
+                        return
+                    self._cond.wait(min(0.5, max(0.001, next_at - now)))
+                    continue
+            for job in expired:
+                err = TimeoutError(f"download {job.key!r} exceeded its "
+                                   f"deadline; failed by watchdog")
+                self._finish(job, None, _DONE, err)
+            with self._cond:
+                self._finishing -= len(expired)
+                self._cond.notify_all()
 
     # -- cancellation ---------------------------------------------------------
     def cancel(self, key: str) -> bool:
@@ -278,10 +355,19 @@ class DownloadScheduler:
                 self._cond.wait(remaining if remaining is not None else 0.5)
             return True
 
-    def shutdown(self, *, wait: bool = True) -> None:
+    def shutdown(self, *, wait: bool = True,
+                 timeout: float | None = None) -> None:
+        """Flush, optionally drain (``timeout`` overrides the constructor's
+        ``drain_timeout``), then refuse new work.  A timed-out drain warns
+        with the undrained job count instead of returning silently."""
         self.flush()
         if wait:
-            self.drain(timeout=30.0)
+            limit = self.drain_timeout if timeout is None else timeout
+            if not self.drain(timeout=limit):
+                logger.warning(
+                    "scheduler %r: drain timed out after %.1fs with %d "
+                    "undrained job(s); shutting down anyway",
+                    self.name, limit, self.outstanding())
         with self._cond:
             self._shutdown = True
             self._cond.notify_all()
@@ -331,10 +417,15 @@ class DownloadScheduler:
         except BaseException as exc:   # noqa: BLE001 - reported via handle
             error = exc
         dt = time.perf_counter() - t0
-        for handle, _ in job.handles:
-            handle.seconds = dt
         with self._cond:
             self.stats.download_seconds += dt
+            if job.timed_out:
+                # the watchdog already failed this job and delivered
+                # TimeoutError to its observers; a late work() completion
+                # must neither re-deliver nor double-count
+                return
+            for handle, _ in job.handles:
+                handle.seconds = dt
             if error is not None:
                 self.stats.failed += 1
             elif result is None:

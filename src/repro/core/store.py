@@ -75,6 +75,8 @@ class StoreStats:
     bytes_written: int = 0
     bytes_read: int = 0
     load_seconds: float = 0.0
+    injected_write_faults: int = 0
+    injected_read_faults: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -85,6 +87,8 @@ class StoreStats:
             "bytes_written": self.bytes_written,
             "bytes_read": self.bytes_read,
             "load_seconds": round(self.load_seconds, 6),
+            "injected_write_faults": self.injected_write_faults,
+            "injected_read_faults": self.injected_read_faults,
         }
 
 
@@ -108,10 +112,15 @@ class BitstreamStore:
         "_index": "BitstreamStore._lock",
     }
 
-    def __init__(self, path: str) -> None:
+    def __init__(self, path: str, *, faults=None) -> None:
         self.path = os.path.abspath(str(path))
         os.makedirs(self.path, exist_ok=True)
         self.stats = StoreStats()
+        # optional FaultPlan (DESIGN.md §12): "store_write" garbles a blob
+        # before it lands on disk (an interrupted/corrupting write that the
+        # next load must reject), "store_read" flips bytes before
+        # validation (media corruption the checksum chain must catch)
+        self.faults = faults
         self._lock = threading.Lock()
         # key -> _Entry for entries this instance has seen (written or
         # scanned); the filesystem stays the source of truth for loads.
@@ -217,6 +226,13 @@ class BitstreamStore:
             + raw_header
             + payload_blob
         )
+        if self.faults is not None and self.faults.fires("store_write", key):
+            # injected write corruption: the entry lands truncated mid-
+            # payload, exactly like a torn write the atomic replace cannot
+            # guard against (e.g. power loss after the replace).  The next
+            # load's validation chain rejects it and cold-compiles.
+            blob = blob[: max(len(_MAGIC), len(blob) // 2)]
+            self.stats.injected_write_faults += 1
         final = self._path_for(key)
         tmp = final + f".tmp.{os.getpid()}.{threading.get_ident()}"
         with self._lock:
@@ -254,6 +270,14 @@ class BitstreamStore:
                     data = f.read()
             except OSError:
                 return None  # plain miss: not an error
+            if data and self.faults is not None \
+                    and self.faults.fires("store_read", key):
+                # injected read corruption: flip a byte mid-blob before
+                # validation — the magic/header/checksum chain must catch
+                # it and degrade to a cold compile, never crash
+                mid = len(data) // 2
+                data = data[:mid] + bytes([data[mid] ^ 0xFF]) + data[mid + 1:]
+                self.stats.injected_read_faults += 1
             self.stats.bytes_read += len(data)
             header = None
             if data[: len(_MAGIC)] != _MAGIC:

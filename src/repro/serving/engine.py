@@ -138,6 +138,17 @@ class ServeEngine:
             return 0
         return self.overlay.defragment()
 
+    def overlay_failures(self) -> "dict | None":
+        """The backing overlay's (or fleet's) failure ledger — retries,
+        breaker states, dispatch fallbacks, quarantines, evacuations
+        (DESIGN.md §12).  ``None`` without an overlay.  Failures never
+        surface as dropped tokens on this engine; they surface HERE (and
+        as latency): an admitted request always completes, served by a
+        retried download, another replica, or the residue fallback."""
+        if self.overlay is None:
+            return None
+        return self.overlay.failure_ledger()
+
     def resize(self, tile_budget: int) -> None:
         """Change the engine's per-accelerator footprint cap in place.
 

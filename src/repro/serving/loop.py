@@ -214,4 +214,5 @@ class EventLoopEngine(ServeEngine):
                                     if q.shed_reason == r)
                              for r in {q.shed_reason for q in self.shed}},
             "queued": len(self.queue),
+            "failures": self.overlay_failures(),
         }

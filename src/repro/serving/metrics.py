@@ -16,9 +16,37 @@ serving layers.
 
 from __future__ import annotations
 
-__all__ = ["Histogram"]
+__all__ = ["Histogram", "merge_counts"]
 
 _N_BUCKETS = 32
+
+
+def merge_counts(*ledgers: "dict | None") -> dict:
+    """Merge counter ledgers (e.g. ``Overlay.failure_ledger()`` outputs
+    from several members or runs): numeric values sum, list values union
+    (deduplicated, sorted), nested dicts merge recursively, ``None``
+    ledgers are skipped.  Mismatched value types take the later ledger's
+    value — ledger data is observability, not billing."""
+    out: dict = {}
+    for ledger in ledgers:
+        if not ledger:
+            continue
+        for key, value in ledger.items():
+            have = out.get(key)
+            if isinstance(value, bool) or isinstance(have, bool):
+                out[key] = value
+            elif isinstance(have, (int, float)) and \
+                    isinstance(value, (int, float)):
+                out[key] = have + value
+            elif isinstance(have, list) and isinstance(value, list):
+                out[key] = sorted(set(have) | set(value))
+            elif isinstance(have, dict) and isinstance(value, dict):
+                out[key] = merge_counts(have, value)
+            elif isinstance(value, list):
+                out[key] = sorted(set(value))
+            else:
+                out[key] = value
+    return out
 
 
 class Histogram:

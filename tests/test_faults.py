@@ -1,0 +1,484 @@
+"""Chaos-hardening tests (DESIGN.md §12): deterministic fault injection,
+download retry/backoff and circuit breakers, dispatch-failure fallback,
+resident loss, store corruption channels, download deadlines/watchdog,
+fleet member health (quarantine, readmission, death, evacuation), shared
+fleet drain deadlines, and the failure-ledger surfaces."""
+
+import logging
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import check
+from repro.core import FleetOverlay, Overlay
+from repro.core.faults import (FaultError, FaultEvent, FaultPlan,
+                               replay_identical)
+from repro.core.scheduler import DownloadScheduler
+from repro.serving.metrics import merge_counts
+
+X = jnp.arange(8, dtype=jnp.float32)
+Y = jnp.ones(8, jnp.float32)
+
+
+def _mul(a, b):
+    return jnp.sum(a * b) * 2.0
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded, replayable, thread-order independent
+# ---------------------------------------------------------------------------
+def test_fault_plan_is_deterministic_per_seed():
+    mk = lambda s: FaultPlan(s, download_failure_rate=0.3,
+                             dispatch_failure_rate=0.2)
+    a, b, c = mk(7), mk(7), mk(8)
+    keys = [f"k{i}" for i in range(6)]
+    for plan in (a, b, c):
+        for _ in range(40):
+            for k in keys:
+                plan.fires("download", k)
+                plan.fires("dispatch", k)
+    assert a.events() == b.events()
+    assert a.events()                      # 0.3 over 240 rolls must fire
+    assert replay_identical(a.events(), b.events())
+    assert a.events() != c.events()        # a different seed reschedules
+
+
+def test_fault_plan_ignores_thread_interleaving():
+    # decisions key on the per-(channel, key) ordinal, so firing the same
+    # per-key sequences in a different global order yields the same ledger
+    a = FaultPlan(3, download_failure_rate=0.5)
+    b = FaultPlan(3, download_failure_rate=0.5)
+    for _ in range(20):
+        a.fires("download", "x")
+    for _ in range(20):
+        a.fires("download", "y")
+    for _ in range(20):                    # interleaved instead of serial
+        b.fires("download", "y")
+        b.fires("download", "x")
+    assert a.events() == b.events()
+
+
+def test_fault_plan_validates_inputs():
+    with pytest.raises(ValueError):
+        FaultPlan(0, download_failure_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(0).fires("no_such_channel", "k")
+
+
+def test_member_deaths_fire_once_at_their_threshold():
+    plan = FaultPlan(0, member_deaths={1: 10, 2: 5})
+    assert plan.members_to_kill(4) == []
+    assert plan.members_to_kill(5) == [2]
+    assert plan.members_to_kill(12) == [1]     # 2 already killed
+    assert plan.members_to_kill(100) == []
+    assert plan.describe()["killed"] == [1, 2]
+
+
+def test_event_counts_and_describe_are_json_friendly():
+    import json
+    plan = FaultPlan(1, store_read_corrupt_rate=1.0)
+    plan.fires("store_read", "k")
+    assert plan.event_counts() == {"store_read": 1}
+    json.dumps(plan.describe())
+    assert plan.events() == (FaultEvent("store_read", "k", 1),)
+
+
+# ---------------------------------------------------------------------------
+# download failures: backoff retries, breaker open/probe/close
+# ---------------------------------------------------------------------------
+def test_sync_overlay_degrades_to_fallback_and_opens_breaker():
+    want = np.asarray(jax.jit(_mul)(X, Y))
+    plan = FaultPlan(11, download_failure_rate=1.0)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(_mul, name="doomed")
+    with pytest.warns(RuntimeWarning):
+        outs = [np.asarray(f(X, Y)) for _ in range(12)]
+    for out in outs:                       # zero-drop: every call answered
+        np.testing.assert_array_equal(out, want)
+    led = ov.failure_ledger()
+    assert led["breaker_opens"] == 1 and led["breakers_open"] == 1
+    assert led["download_failures"] >= ov.breaker_threshold
+    assert led["download_retries"] >= 1
+    assert led["breaker_probes"] >= 1      # the open breaker still probes
+    assert ov.stats.fallback_calls == 12
+    assert not check.check_overlay(ov)     # invariants hold under faults
+    ov.close()
+
+
+def test_breaker_recloses_after_a_successful_probe():
+    plan = FaultPlan(11, download_failure_rate=1.0)
+    ov = Overlay(3, 3, faults=plan, breaker_probe_after=2)
+    f = ov.jit(_mul, name="healing")
+    with pytest.warns(RuntimeWarning):
+        for _ in range(4):
+            f(X, Y)
+    assert ov.failure_ledger()["breakers_open"] == 1
+    ov.faults = None                       # the outage ends
+    for _ in range(8):                     # next probe succeeds
+        out = f(X, Y)
+    led = ov.failure_ledger()
+    assert led["breaker_closes"] == 1 and led["breakers_open"] == 0
+    assert len(ov.fabric) == 1             # the accelerator finally landed
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jax.jit(_mul)(X, Y)))
+    ov.close()
+
+
+def test_async_overlay_retries_injected_failures_without_blocking():
+    plan = FaultPlan(5, download_failure_rate=1.0)
+    ov = Overlay(3, 3, async_downloads=True, faults=plan)
+    f = ov.jit(_mul, name="bg_doomed")
+    with pytest.warns(RuntimeWarning):
+        for _ in range(6):
+            f(X, Y)
+            ov.drain()
+    assert ov.stats.download_failures >= 1
+    assert ov.stats.fallback_calls == 6    # every call served by residue
+    # the residency is admitted (PR regions held, download-pending) but no
+    # bitstream ever committed: the wrapper never published a record
+    entry = next(iter(f._entries.values()))
+    assert entry.acc is None and entry.record is None
+    assert ov.failure_ledger()["breakers_open"] == 1
+    ov.close()
+
+
+# ---------------------------------------------------------------------------
+# dispatch failures and resident loss: evict, fall back, re-download
+# ---------------------------------------------------------------------------
+def test_dispatch_failure_serves_residue_and_evicts_suspect():
+    want = np.asarray(jax.jit(_mul)(X, Y))
+    plan = FaultPlan(2, dispatch_failure_rate=1.0)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(_mul, name="flaky")
+    outs = [np.asarray(f(X, Y)) for _ in range(4)]
+    for out in outs:
+        np.testing.assert_array_equal(out, want)
+    assert ov.stats.dispatch_failures >= 1
+    assert ov.stats.dispatch_fallbacks >= 1
+    res = list(ov.fabric.residents.values())
+    assert all(r.dispatch_failures == 0 for r in res)  # fresh re-download
+    assert not check.check_overlay(ov)
+    ov.close()
+
+
+def test_resident_loss_is_counted_and_survived():
+    plan = FaultPlan(4, resident_loss_rate=1.0)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(_mul, name="vanishing")
+    want = np.asarray(jax.jit(_mul)(X, Y))
+    for _ in range(4):
+        np.testing.assert_array_equal(np.asarray(f(X, Y)), want)
+    assert ov.stats.resident_losses >= 1
+    ov.close()
+
+
+# ---------------------------------------------------------------------------
+# store corruption channels
+# ---------------------------------------------------------------------------
+def test_store_write_corruption_degrades_warm_boot_to_cold_compile(tmp_path):
+    d = str(tmp_path / "store")
+    plan = FaultPlan(6, store_write_corrupt_rate=1.0)
+    ov = Overlay(3, 3, store_path=d, faults=plan)
+    f = ov.jit(_mul, name="torn")
+    cold = np.asarray(f(X, Y))
+    ov.drain()
+    ov.close()
+    assert ov.store.stats.injected_write_faults >= 1
+
+    ov2 = Overlay(3, 3, store_path=d)      # healthy boot over the torn file
+    f2 = ov2.jit(_mul, name="torn")
+    warm = np.asarray(f2(X, Y))
+    np.testing.assert_array_equal(warm, cold)
+    assert ov2.cache.stats.store_hits == 0
+    assert ov2.store.stats.load_failures >= 1
+    ov2.close()
+
+
+def test_store_read_corruption_is_caught_by_validation(tmp_path):
+    d = str(tmp_path / "store")
+    ov = Overlay(3, 3, store_path=d)       # persist a HEALTHY entry
+    f = ov.jit(_mul, name="flip")
+    cold = np.asarray(f(X, Y))
+    ov.drain()
+    ov.close()
+
+    plan = FaultPlan(9, store_read_corrupt_rate=1.0)
+    ov2 = Overlay(3, 3, store_path=d, faults=plan)
+    f2 = ov2.jit(_mul, name="flip")
+    warm = np.asarray(f2(X, Y))            # bit-flip caught, cold compile
+    np.testing.assert_array_equal(warm, cold)
+    assert ov2.store.stats.injected_read_faults >= 1
+    assert ov2.store.stats.load_failures >= 1
+    assert ov2.cache.stats.store_hits == 0
+    ov2.close()
+
+
+# ---------------------------------------------------------------------------
+# deadlines, watchdog, and drain timeouts
+# ---------------------------------------------------------------------------
+def test_download_deadline_watchdog_fails_stuck_jobs():
+    plan = FaultPlan(8, slow_download_rate=1.0, slow_seconds=5.0)
+    ov = Overlay(3, 3, async_downloads=True, faults=plan,
+                 download_deadline=0.15)
+    f = ov.jit(_mul, name="stuck")
+    t0 = time.monotonic()
+    with pytest.warns(RuntimeWarning):
+        f(X, Y)
+        assert ov.drain(timeout=3.0)       # watchdog unwedges the drain
+    assert time.monotonic() - t0 < 4.0     # NOT the 5s injected stall
+    assert ov.scheduler.stats.timed_out >= 1
+    assert ov.failure_ledger()["timed_out_downloads"] >= 1
+    assert np.asarray(f(X, Y)).shape == ()
+    ov.close(drain_timeout=0.1)
+
+
+def test_scheduler_shutdown_timeout_warns_with_undrained_count(caplog):
+    gate = threading.Event()
+    started = threading.Event()
+
+    def wedge():
+        started.set()
+        gate.wait(10.0)
+
+    sched = DownloadScheduler(workers=1, drain_timeout=0.2)
+    sched.submit("wedged", wedge, lambda *a: None)
+    # shutdown() flushes the queue first; wait until the job is RUNNING so
+    # the flush can't cancel it and the drain genuinely times out
+    assert started.wait(5.0)
+    with caplog.at_level(logging.WARNING, logger="repro.core.scheduler"):
+        t0 = time.monotonic()
+        sched.shutdown(wait=True)
+    assert time.monotonic() - t0 < 5.0
+    assert any("undrained" in r.message and "1" in r.message
+               for r in caplog.records)
+    gate.set()
+
+
+def test_overlay_close_honours_drain_timeout_override():
+    ov = Overlay(3, 3, drain_timeout=17.0)
+    assert ov.scheduler.drain_timeout == 17.0
+    ov.close(drain_timeout=0.05)           # returns promptly, nothing queued
+    with pytest.raises(ValueError):
+        Overlay(3, 3, retry_backoff=0)
+
+
+# ---------------------------------------------------------------------------
+# fleet health: quarantine, readmission, death, evacuation
+# ---------------------------------------------------------------------------
+def test_quarantine_then_readmission_after_clean_windows():
+    plan = FaultPlan(13, download_failure_rate=1.0)
+    m0 = Overlay(3, 3, faults=plan)
+    m1 = Overlay(3, 3)
+    fleet = FleetOverlay([m0, m1], window=4, replicate_after=3,
+                         drain_below=1, quarantine_errors=1,
+                         quarantine_windows=1)
+    f = fleet.jit(_mul, name="sick")       # first placement lands on m0
+    with pytest.warns(RuntimeWarning):
+        for _ in range(8):
+            f(X, Y)
+    # with quarantine_windows=1 the member may already have earned its
+    # first clean window by now — either way it left the healthy pool
+    assert fleet._health[0].state in ("quarantined", "probation")
+    assert fleet.stats.quarantines >= 1
+
+    m0.faults = None                       # outage over: probes succeed
+    for _ in range(40):
+        f(X, Y)
+    assert fleet._health[0].state == "healthy"
+    assert fleet.stats.readmissions >= 1
+    assert not check.check_fleet(fleet)
+    led = fleet.failure_ledger()
+    assert led["quarantines"] >= 1 and led["quarantined_members"] == []
+    fleet.close()
+
+
+def test_kill_member_evacuates_sole_copies_and_keeps_serving():
+    fleet = FleetOverlay(2, rows=3, cols=3, window=64,
+                         replicate_after=10 ** 6)
+    f = fleet.jit(_mul, name="refugee")
+    want = np.asarray(f(X, Y))             # sole copy lands on member 0
+    assert len(fleet.members[0].fabric) == 1
+    fleet.kill_member(0)
+    assert fleet.stats.member_deaths == 1
+    assert fleet.stats.evacuations == 1
+    assert len(fleet.members[0].fabric) == 0       # flushed
+    assert len(fleet.members[1].fabric) == 1       # re-homed
+    for _ in range(3):                     # zero-drop across the death
+        np.testing.assert_array_equal(np.asarray(f(X, Y)), want)
+    assert fleet._health[0].state == "dead"
+    assert fleet.failure_ledger()["dead_members"] == [0]
+    assert not check.check_fleet(fleet)
+    fleet.kill_member(0)                   # idempotent
+    assert fleet.stats.member_deaths == 1
+    with pytest.raises(ValueError):
+        fleet.kill_member(9)
+    fleet.close()
+
+
+def test_fault_plan_member_deaths_kill_via_dispatch_count():
+    plan = FaultPlan(7, member_deaths={0: 3})
+    fleet = FleetOverlay(2, rows=3, cols=3, window=64,
+                         replicate_after=10 ** 6, faults=plan)
+    assert fleet.members[0].faults is plan  # plan threads to the members
+    f = fleet.jit(_mul, name="doomed_home")
+    want = np.asarray(f(X, Y))
+    for _ in range(6):
+        np.testing.assert_array_equal(np.asarray(f(X, Y)), want)
+    assert fleet.stats.member_deaths == 1
+    assert fleet._health[0].state == "dead"
+    fleet.close()
+
+
+def test_fleet_retries_failed_dispatch_on_another_replica():
+    m0 = Overlay(3, 3)
+    m1 = Overlay(3, 3)
+    fleet = FleetOverlay([m0, m1], window=4, replicate_after=2,
+                         drain_below=1, quarantine_errors=10 ** 6)
+    f = fleet.jit(_mul, name="failover")
+    want = np.asarray(jax.jit(_mul)(X, Y))
+    for _ in range(8):                     # warm: replica minted on m1
+        f(X, Y)
+    assert fleet.stats.replications >= 1
+
+    m0.faults = FaultPlan(17, dispatch_failure_rate=1.0)
+    for _ in range(8):                     # m0 dispatches fail: failover
+        np.testing.assert_array_equal(np.asarray(f(X, Y)), want)
+    assert fleet.stats.dispatch_retries >= 1
+    assert fleet.failure_ledger()["fleet_dispatch_retries"] >= 1
+    assert not check.check_fleet(fleet)
+    fleet.close()
+
+
+def test_dead_member_never_takes_new_placements():
+    fleet = FleetOverlay(2, rows=3, cols=3, window=64)
+    fleet.kill_member(0)
+    fns = [fleet.jit(lambda x, s=float(i): x * s, name=f"p{i}")
+           for i in range(3)]
+    for f in fns:
+        f(X)
+    assert len(fleet.members[0].fabric) == 0
+    assert len(fleet.members[1].fabric) == 3
+    fleet.close()
+
+
+def test_fleet_drain_shares_one_deadline_across_members():
+    fleet = FleetOverlay(3, rows=3, cols=3)
+    granted = []
+
+    def slow_drain(timeout=None):
+        granted.append(timeout)
+        time.sleep(0.15)
+        return False
+
+    for m in fleet.members:
+        m.drain = slow_drain
+    t0 = time.monotonic()
+    assert fleet.drain(timeout=0.5) is False
+    # one shared deadline: each member sees only the remaining budget,
+    # and the whole fleet answers within ~timeout, not 3x timeout
+    assert time.monotonic() - t0 < 1.0
+    assert granted[0] <= 0.5
+    assert granted[1] < granted[0] and granted[2] < granted[1]
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# invariant checkers for the failure machinery
+# ---------------------------------------------------------------------------
+def test_check_breakers_flags_open_breaker_without_fallback():
+    ov = Overlay(3, 3)
+    f = ov.jit(_mul, name="audit")
+    f(X, Y)
+    assert not check.check_breakers(ov)
+    entry = next(iter(f._entries.values()))
+    entry.breaker = "open"
+    entry.closed = None
+    entry.acc = None
+    rules = [v.rule for v in check.check_breakers(ov)]
+    assert rules == ["entry/breaker-fallback"]
+    entry.breaker = "confused"
+    assert [v.rule for v in check.check_breakers(ov)] \
+        == ["entry/breaker-state"]
+    ov.close()
+
+
+def test_check_fleet_flags_quarantined_primary_with_live_standby():
+    fleet = FleetOverlay(2, rows=3, cols=3, window=4, replicate_after=2,
+                         drain_below=1)
+    f = fleet.jit(_mul, name="hot")
+    for _ in range(16):                    # hot enough to replicate
+        f(X, Y)
+    assert fleet.stats.replications >= 1
+    assert not check.check_fleet(fleet)
+    # force the illegal state by hand: primary's member quarantined while
+    # a live copy sits on the healthy member — demotion should forbid this
+    rec = next(iter(f._records.values()))
+    fleet._health[rec.replicas[0].member_index].state = "quarantined"
+    rules = [v.rule for v in check.check_fleet(fleet)]
+    assert "fleet/quarantined-primary" in rules
+    # ...and the next rebalance repairs it
+    with fleet._lock:
+        fleet._demote_member(rec.replicas[0].member_index)
+    assert not check.check_fleet(fleet)
+    fleet._health.append(object())
+    assert any(v.rule == "fleet/health-size"
+               for v in check.check_fleet(fleet))
+    fleet._health.pop()
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# ledger surfaces
+# ---------------------------------------------------------------------------
+def test_describe_carries_failure_ledger_and_fault_plan(tmp_path):
+    import json
+    plan = FaultPlan(1, download_failure_rate=1.0)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(_mul, name="led")
+    with pytest.warns(RuntimeWarning):
+        f(X, Y)
+    d = ov.describe()
+    json.dumps(d)
+    assert d["failures"]["download_failures"] >= 1
+    assert d["faults"]["rates"] == {"download": 1.0}
+    assert not check.check_overlay_describe(ov)
+    ov.close()
+
+    fleet = FleetOverlay(2, rows=3, cols=3)
+    g = fleet.jit(_mul, name="fled")
+    g(X, Y)
+    fd = fleet.describe()
+    json.dumps(fd)
+    states = [h["state"] for h in fd["fleet"]["health"]]
+    assert states == ["healthy", "healthy"]
+    assert not check.check_fleet_describe(fleet)
+    fleet.close()
+
+
+def test_merge_counts_merges_ledgers():
+    a = {"retries": 2, "dead_members": [0], "nested": {"x": 1}}
+    b = {"retries": 3, "dead_members": [1], "nested": {"x": 2}, "note": "hi"}
+    merged = merge_counts(a, None, b)
+    assert merged == {"retries": 5, "dead_members": [0, 1],
+                      "nested": {"x": 3}, "note": "hi"}
+
+
+def test_fault_error_never_escapes_the_public_api():
+    plan = FaultPlan(21, download_failure_rate=0.5, dispatch_failure_rate=0.3,
+                     resident_loss_rate=0.3)
+    ov = Overlay(3, 3, faults=plan)
+    f = ov.jit(_mul, name="storm")
+    want = np.asarray(jax.jit(_mul)(X, Y))
+    with pytest.warns(RuntimeWarning):
+        for _ in range(20):
+            try:
+                out = f(X, Y)
+            except FaultError as exc:      # pragma: no cover - the bug
+                pytest.fail(f"FaultError escaped the dispatch path: {exc}")
+            np.testing.assert_array_equal(np.asarray(out), want)
+    assert not check.check_overlay(ov)
+    ov.close()

@@ -33,11 +33,14 @@ def test_lock_order_graph_is_the_documented_one(real_tree):
     graph = lint.lock_graph_summary()
     assert graph["locks"] == ["BitstreamStore._lock",
                               "DownloadScheduler._cond",
+                              "FaultPlan._lock",
                               "FleetOverlay._lock", "Overlay._lock"]
-    # fleet -> member -> {scheduler, store}, and nothing pointing backwards
+    # fleet -> member -> {scheduler, store}, and nothing pointing backwards;
+    # the fault plan's ledger lock is a leaf (FaultPlan calls nothing out)
     assert graph["edges"] == [
         "FleetOverlay._lock -> BitstreamStore._lock",
         "FleetOverlay._lock -> DownloadScheduler._cond",
+        "FleetOverlay._lock -> FaultPlan._lock",
         "FleetOverlay._lock -> Overlay._lock",
         "Overlay._lock -> BitstreamStore._lock",
         "Overlay._lock -> DownloadScheduler._cond",

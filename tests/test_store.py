@@ -164,6 +164,61 @@ def test_pickle_garbage_payload_cold_compiles(tmp_path, caplog):
     assert ov2.store.stats.load_failures >= 1
 
 
+def test_interrupted_persist_every_header_boundary(tmp_path):
+    """A persist interrupted mid-write (power cut, OOM-kill) can leave the
+    file truncated at ANY byte.  Sweep every boundary of the
+    magic + length + JSON-header region: a fresh store must treat each
+    torn file as a miss — no exception, no stale load."""
+    d = str(tmp_path / "store")
+    store = BitstreamStore(d)
+    key = "tornacc:deadbeef"
+    store.save(key, b"payload bytes " * 8, kind="kernel")
+    path = store._path_for(key)
+    with open(path, "rb") as fh:
+        data = fh.read()
+    hlen = int.from_bytes(data[len(_MAGIC):len(_MAGIC) + 4], "little")
+    header_end = len(_MAGIC) + 4 + hlen
+    assert header_end < len(data)
+
+    for cut in range(header_end + 1):
+        with open(path, "wb") as fh:
+            fh.write(data[:cut])
+        fresh = BitstreamStore(d)           # cold scan over the torn file
+        assert fresh.load_blob(key) is None, f"cut at byte {cut}"
+
+    with open(path, "wb") as fh:            # sanity: intact file round-trips
+        fh.write(data)
+    assert BitstreamStore(d).load_blob(key) is not None
+
+
+@pytest.mark.parametrize("cut_at", ["start", "mid_magic", "mid_length",
+                                    "mid_header", "header_end"])
+def test_interrupted_persist_warm_boot_cold_compiles(tmp_path, cut_at):
+    # full-overlay version of the boundary sweep: a warm boot over a torn
+    # entry degrades to cold compile with identical numbers, never crashes
+    d = str(tmp_path / "store")
+    _, out1 = _drive_once(d)
+    store = BitstreamStore(d)
+    keys = store.keys()
+    assert keys
+    for k in keys:
+        path = store._path_for(k)
+        with open(path, "rb") as fh:
+            data = fh.read()
+        hlen = int.from_bytes(data[len(_MAGIC):len(_MAGIC) + 4], "little")
+        cut = {"start": 0,
+               "mid_magic": len(_MAGIC) // 2,
+               "mid_length": len(_MAGIC) + 2,
+               "mid_header": len(_MAGIC) + 4 + hlen // 2,
+               "header_end": len(_MAGIC) + 4 + hlen}[cut_at]
+        with open(path, "wb") as fh:
+            fh.write(data[:cut])
+
+    ov2, out2 = _drive_once(d)
+    np.testing.assert_array_equal(out1, out2)
+    assert ov2.cache.stats.store_hits == 0
+
+
 def test_store_scan_ignores_foreign_files(tmp_path):
     d = tmp_path / "store"
     d.mkdir()
